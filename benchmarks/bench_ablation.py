@@ -1,0 +1,57 @@
+"""Paper Table 2 analogue: step-by-step ablation of the co-design,
+UNPU-style conventional LUT -> LUT Tensor Core (W_INT2 A_INT8 case).
+
+Area model components (normalized units, calibrated so the component
+ratios reproduce Table 2's measured trajectory — the *structure* of the
+model, table/negation/precompute/adder, is the paper's §3; only the 28nm
+gate-cost constants are fitted):
+
+  step                       what changes                       paper   ours
+  0 conventional (UNPU+DSE)  full 2^K table, per-cluster        1.000x  1.000x
+                             precompute, negation circuit
+  1 +reinterpret+symmetrize  2^(K-1) table & precompute (Eq4-5) 1.317x
+  2 +negation folding        negation circuit removed (Eq 6)    1.351x
+  3 +DFG transform + fusion  precompute leaves the array        1.440x
+"""
+
+K = 4
+E_FULL = 1 << K
+E_HALF = 1 << (K - 1)
+
+# calibrated area components (normalized to conventional total = 1.0)
+TABLE_PER_ENTRYBIT = 0.391 / (E_FULL * 8)   # table registers
+NEGATION = 0.019                             # runtime bit-flip circuit
+PRECOMP_PER_ENTRY = 0.092 / E_FULL           # per-cluster precompute adders
+ADDER = 0.499                                # accumulate adder (fixed)
+
+
+def area(entries, negation, precompute):
+    a = entries * 8 * TABLE_PER_ENTRYBIT + ADDER
+    if negation:
+        a += NEGATION
+    if precompute:
+        a += entries * PRECOMP_PER_ENTRY
+    return a
+
+
+def main():
+    steps = [
+        ("conventional_unpu_dse", E_FULL, True, True),
+        ("+reinterpret_symmetrize", E_HALF, True, True),
+        ("+negation_folding", E_HALF, False, True),
+        ("+dfg_fusion (=LUT-TC)", E_HALF, False, False),
+    ]
+    paper = [1.000, 1.317, 1.351, 1.440]
+    print("# Table 2 analogue: co-design ablation (W2A8, K=4)")
+    print("step,table_entries,area,density_gain,paper_reported")
+    a0 = area(*steps[0][1:])
+    for (name, e, neg, pre), p in zip(steps, paper):
+        a = area(e, neg, pre)
+        print(f"{name},{e},{a:.3f},{a0 / a:.3f}x,{p:.3f}x")
+    final = a0 / area(*steps[-1][1:])
+    print(f"overall,LUT-TC vs UNPU: {final:.2f}x (paper Table 2: 1.44x)")
+    assert abs(final - 1.44) < 0.02
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Fig. 11 + Fig. 14 analogue: K-axis and MNK-tile design-space
+exploration, under BOTH cost models (mux hardware as in the paper; MXU
+realization for our TPU target). See core/dse.py."""
+
+from repro.core import dse
+
+
+def main():
+    print("# Fig11 analogue: K-axis DSE")
+    print("k,mux_density_int8lut,mux_density_fp16lut,mxu_score")
+    for k in range(1, 9):
+        print(f"{k},{dse.mux_density(k):.4f},"
+              f"{dse.mux_density(k, lut_bits=16, fp_accum=True):.4f},"
+              f"{dse.mxu_cost(k)['score']:.3f}")
+    print(f"optimum,mux_int={dse.best_k_mux(8, False)},"
+          f"mux_fp={dse.best_k_mux(16, True)},mxu={dse.best_k_mxu()}")
+    assert dse.best_k_mux(8, False) == 4      # paper Fig 11 (INT)
+    assert dse.best_k_mux(16, True) == 5      # paper Fig 11 (FP)
+    assert dse.best_k_mxu() <= 2              # TPU adaptation finding
+
+    print("\n# Fig14 analogue: MNK tile sweep at M*N*K=512 (area-iso)")
+    print("m,n,k,bytes_per_mac,table_B,weights_B")
+    rows = dse.sweep_tiles(512)
+    for r in rows[:6]:
+        print(f"{r['m']},{r['n']},{r['k']},{r['bytes_per_mac']:.3f},"
+              f"{r['table']:.0f},{r['weights']:.0f}")
+    best = rows[0]
+    # elongated shape: N >= 4x M at the optimum (paper: M2N64K4)
+    assert best["n"] >= 4 * best["m"], best
+    print(f"optimum,M{best['m']}N{best['n']}K{best['k']} (elongated)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Kernel-level microbench (paper §4.3 analogue at interpret-mode scale):
+Pallas LUT kernel vs Pallas dequant kernel vs jnp reference, small shapes
+(interpret mode executes the kernel body in Python — timings are for
+relative sanity on CPU; the TPU projection comes from bench_mpgemm)."""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as Q
+from repro.kernels import ops, ref
+
+
+def _time(fn, reps=2):
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+    m, k, n = 16, 256, 256
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    qw = Q.quantize(w, 2, k_group=4)
+    print("# kernel-level (interpret mode, correctness-bearing timings only)")
+    print("kernel,us_per_call,max_abs_err_vs_oracle")
+    want = np.asarray(ref.ref_lut_mpgemm_matmul(a, qw, table_quant="per_row"))
+    got = np.asarray(ops.lut_mpgemm(a, qw, table_quant="per_row",
+                                    block_m=8, block_n=128, block_g=8,
+                                    interpret=True))
+    t = _time(lambda: ops.lut_mpgemm(a, qw, table_quant="per_row", block_m=8,
+                                     block_n=128, block_g=8, interpret=True))
+    print(f"lut_mpgemm_pallas,{t:.0f},{np.abs(got - want).max():.2e}")
+    wantd = np.asarray(ref.ref_dequant_mpgemm(a, qw))
+    gotd = np.asarray(ops.dequant_mpgemm(a, qw, block_m=8, block_n=128,
+                                         block_g=8, interpret=True))
+    t = _time(lambda: ops.dequant_mpgemm(a, qw, block_m=8, block_n=128,
+                                         block_g=8, interpret=True))
+    print(f"dequant_mpgemm_pallas,{t:.0f},{np.abs(gotd - wantd).max():.2e}")
+    tt = ops.table_precompute(a, 4, "per_row", block_m=8, block_g=8,
+                              interpret=True)
+    wt = ref.ref_table_precompute(a, 4, "per_row")
+    t = _time(lambda: ops.table_precompute(a, 4, "per_row", block_m=8,
+                                           block_g=8, interpret=True).values)
+    err = np.abs(np.asarray(tt.values, np.int32)
+                 - np.asarray(wt.values, np.int32)).max()
+    print(f"table_precompute_pallas,{t:.0f},{err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Render the §Dry-run / §Roofline tables for EXPERIMENTS.md from the
+dryrun result JSONs."""
+
+import json
+import os
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def load(paths):
+    rows = []
+    for p in paths:
+        if os.path.exists(p):
+            rows += json.load(open(p))
+    return rows
+
+
+def render(rows, mesh="single"):
+    out = []
+    out.append("| arch | shape | kind | t_compute (s) | t_memory (s) | "
+               "t_collective (s) | dominant | MODEL_FLOPS/HLO | "
+               "mem-eff | roofline |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("mesh") != mesh or r.get("mode"):
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"skipped | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | |")
+            continue
+        f = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {f['t_compute']:.2e} | {f['t_memory']:.2e} "
+            f"| {f['t_collective']:.2e} | {f['dominant']} "
+            f"| {f['useful_flops_ratio']:.3f} | {f['memory_efficiency']:.3f} "
+            f"| {f['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def render_memory(rows, mesh="single"):
+    out = ["| arch | shape | args GiB/dev | temp GiB/dev | peak GiB/dev | "
+           "compile s |", "|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != mesh or r["status"] != "ok" or r.get("mode"):
+            continue
+        m = r["memory"]
+        out.append(f"| {r['arch']} | {r['shape']} "
+                   f"| {fmt_bytes(m['argument_bytes'])} "
+                   f"| {fmt_bytes(m['temp_bytes'])} "
+                   f"| {fmt_bytes(m['peak_per_device'])} "
+                   f"| {r['compile_s']} |")
+    return "\n".join(out)
+
+
+def main(paths=None):
+    paths = paths or ["dryrun_single.json", "dryrun_multi.json"]
+    rows = load(paths)
+    if not rows:
+        print("(no dryrun_*.json found — run repro.launch.dryrun first)")
+        return
+    print("## Roofline (single-pod 16x16 = 256 chips)\n")
+    print(render(rows, "single"))
+    print("\n## Dry-run memory (single-pod)\n")
+    print(render_memory(rows, "single"))
+    multi = [r for r in rows if r.get("mesh") == "multi"]
+    if multi:
+        n_ok = sum(r["status"] == "ok" for r in multi)
+        n_skip = sum(r["status"] == "skipped" for r in multi)
+        n_err = len(multi) - n_ok - n_skip
+        print(f"\n## Multi-pod (2x16x16 = 512 chips): "
+              f"{n_ok} ok / {n_skip} skipped / {n_err} errors\n")
+        print(render(multi, "multi"))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or None)

@@ -1,0 +1,42 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [section ...]
+
+Sections: mpgemm (Fig4/18), dse (Fig11/14), ablation (Table2),
+fusion (Table4), table_quant (Table5), e2e (Table1/Fig17),
+kernels (§4.3), roofline (§Roofline tables from dry-run JSONs).
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_ablation, bench_dse, bench_e2e,
+                            bench_kernels, bench_mpgemm,
+                            bench_precompute_fusion, bench_table_quant,
+                            roofline_table)
+    sections = {
+        "dse": bench_dse.main,
+        "ablation": bench_ablation.main,
+        "e2e": bench_e2e.main,
+        "table_quant": bench_table_quant.main,
+        "fusion": bench_precompute_fusion.main,
+        "mpgemm": bench_mpgemm.main,
+        "kernels": bench_kernels.main,
+        "roofline": roofline_table.main,
+    }
+    want = sys.argv[1:] or list(sections)
+    for name in want:
+        t0 = time.time()
+        print(f"\n{'='*72}\n== {name}\n{'='*72}")
+        try:
+            sections[name]()
+        except Exception as e:  # keep the suite running; report at the end
+            print(f"SECTION FAILED: {name}: {type(e).__name__}: {e}")
+            raise
+        print(f"== {name} done in {time.time()-t0:.1f}s")
+
+
+if __name__ == '__main__':
+    main()

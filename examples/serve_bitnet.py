@@ -1,0 +1,16 @@
+"""Serve the paper's BitNet b1.58 model (ternary weights, LUT mpGEMM) with
+batched requests through the continuous-batching engine.
+
+    PYTHONPATH=src python examples/serve_bitnet.py
+"""
+
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.exit(serve.main([
+        "--arch", "paper-bitnet-3b", "--reduced",
+        "--requests", "10", "--max-new", "16", "--max-batch", "4",
+        "--mode", "lut_xla", "--weight-bits", "2",
+    ]))

@@ -1,0 +1,19 @@
+"""Shared quant defaults: the paper's technique as configured per arch.
+
+``LUT_W2`` is the paper-faithful serve config (2-bit symmetric weights on the
+odd grid, INT8 per-row-quantized tables, K=4 groups, XLA LUT path). Training
+steps add ``qat=True`` (STE fake-quant forward, paper §5).
+"""
+
+LUT_W2 = {
+    "weight_bits": 2,
+    "scheme": "symmetric",
+    "mpgemm_mode": "lut_xla",
+    "table_quant": "per_row",
+    "k_group": 4,
+}
+
+LUT_W4 = dict(LUT_W2, weight_bits=4)
+LUT_W1 = dict(LUT_W2, weight_bits=1)
+TERNARY = dict(LUT_W2, scheme="ternary")  # BitNet b1.58
+DEQUANT_W2 = dict(LUT_W2, mpgemm_mode="dequant")  # paper's baseline

@@ -1,0 +1,203 @@
+"""Architecture configs + shape registry.
+
+Each assigned architecture gets a module ``src/repro/configs/<id>.py``
+exporting ``CONFIG`` (exact published numbers) — registered here.  Every
+config also provides a ``reduced()`` smoke variant (same family, tiny dims)
+for CPU tests, and the four assigned input shapes with per-family skip rules
+(see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+    window: Optional[int] = None   # sliding-window size for long decode
+    skip: Optional[str] = None     # reason if this (arch, shape) is skipped
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 32000
+    head_dim: int = 0
+    qkv_bias: bool = False
+    rope_theta: float = 1.0e4
+    norm_eps: float = 1e-5
+    # ssm (mamba1/2)
+    ssm_state: int = 0
+    d_conv: int = 4
+    expand: int = 2
+    d_inner: int = 0
+    dt_rank: int = 0
+    ssm_heads: int = 0
+    ssm_chunk: int = 64
+    # hybrid
+    attn_every: int = 6
+    # moe
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    n_shared_experts: int = 0
+    first_dense_layers: int = 0
+    dense_d_ff: int = 0
+    # vlm
+    xattn_every: int = 0
+    n_image_tokens: int = 0
+    # audio (enc-dec): n_layers = decoder layers
+    enc_layers: int = 0
+    n_audio_frames: int = 0
+    max_positions: int = 0
+    # numerics / execution
+    kv_cache_dtype: str = "bf16"   # "bf16" | "int8" (quantized KV, paper §5)
+    param_dtype: Any = jnp.float32
+    activation_dtype: Any = jnp.bfloat16
+    attn_chunk: int = 1024
+    # the paper's technique: quant config dict or None
+    #   {"qat": bool, "weight_bits", "scheme", "mpgemm_mode", "table_quant",
+    #    "k_group"}
+    quant: Optional[dict] = None
+    notes: str = ""
+    source: str = ""
+
+    def __post_init__(self):
+        if self.n_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.family in ("ssm", "hybrid") and not self.d_inner:
+            object.__setattr__(self, "d_inner", self.expand * self.d_model)
+        if self.family == "ssm" and not self.dt_rank:
+            object.__setattr__(self, "dt_rank", math.ceil(self.d_model / 16))
+        if self.family == "hybrid" and not self.ssm_heads:
+            object.__setattr__(self, "ssm_heads", max(1, self.d_inner // 64))
+
+    # -- derived -------------------------------------------------------------
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def with_quant(self, **kw) -> "ArchConfig":
+        q = dict(self.quant or {})
+        q.update(kw)
+        return self.replace(quant=q)
+
+    def module(self):
+        from repro.models import api
+        return api.get_module(self.family)
+
+    def shapes(self) -> List[ShapeSpec]:
+        sub_quadratic = self.family in ("ssm", "hybrid")
+        long_skip = (None if sub_quadratic else
+                     "full-attention arch: 500k decode needs sub-quadratic "
+                     "attention (DESIGN.md §5)")
+        return [
+            ShapeSpec("train_4k", 4096, 256, "train"),
+            ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+            ShapeSpec("decode_32k", 32768, 128, "decode"),
+            ShapeSpec("long_500k", 524288, 1, "decode",
+                      window=(8192 if self.family == "hybrid" else None),
+                      skip=long_skip),
+        ]
+
+    def shape(self, name: str) -> ShapeSpec:
+        for s in self.shapes():
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+    def num_params(self) -> int:
+        """Total parameter count N (for MODEL_FLOPS = 6·N·D)."""
+        d, v, l = self.d_model, self.vocab_size, self.n_layers
+        n = 2 * v * d  # embed + head
+        hd = self.head_dim
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        mlp3 = 3 * d * self.d_ff
+        mlp2 = 2 * d * self.d_ff
+        if self.family == "dense":
+            n += l * (attn + mlp3)
+        elif self.family == "moe":
+            nd_ = self.first_dense_layers
+            n += nd_ * (attn + 3 * d * (self.dense_d_ff or self.d_ff))
+            per = attn + self.num_experts * 3 * d * self.d_ff + d * self.num_experts
+            per += self.n_shared_experts * 3 * d * self.d_ff
+            n += (l - nd_) * per
+        elif self.family == "ssm":
+            di, ds = self.d_inner, self.ssm_state
+            per = d * 2 * di + di * (self.dt_rank + 2 * ds) + self.dt_rank * di
+            per += di * ds + 2 * di + di * d
+            n += l * per
+        elif self.family == "hybrid":
+            di, ds = self.d_inner, self.ssm_state
+            per = d * (2 * di + 2 * ds + self.ssm_heads) + di * d + 2 * di
+            n += l * per
+            n += attn + mlp3  # one shared block
+        elif self.family == "vlm":
+            ng = l // self.xattn_every
+            n += (l - ng) * (attn + mlp3) + ng * (attn + mlp3)
+        elif self.family == "audio":
+            n += self.enc_layers * (attn + mlp2) + l * (2 * attn + mlp2)
+            n += self.max_positions * d
+        return n
+
+    def active_params(self) -> int:
+        """Activated params per token (MoE: top-k + shared experts only)."""
+        if self.family != "moe":
+            return self.num_params()
+        d, l = self.d_model, self.n_layers
+        hd = self.head_dim
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        nd_ = self.first_dense_layers
+        n = 2 * self.vocab_size * d
+        n += nd_ * (attn + 3 * d * (self.dense_d_ff or self.d_ff))
+        per = attn + (self.top_k + self.n_shared_experts) * 3 * d * self.d_ff
+        n += (l - nd_) * per
+        return n
+
+
+_REGISTRY: Dict[str, str] = {
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "llama3.2-3b": "repro.configs.llama3_2_3b",
+    "qwen1.5-0.5b": "repro.configs.qwen1_5_0_5b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+    "llama-3.2-vision-11b": "repro.configs.llama3_2_vision_11b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    # the paper's own end-to-end model (Table 1)
+    "paper-bitnet-3b": "repro.configs.paper_bitnet_3b",
+}
+
+ASSIGNED = [k for k in _REGISTRY if k != "paper-bitnet-3b"]
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(_REGISTRY[arch_id])
+    return mod.CONFIG
+
+
+def get_reduced(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(_REGISTRY[arch_id])
+    return mod.reduced()
+
+
+def list_archs() -> List[str]:
+    return list(_REGISTRY)

@@ -1,0 +1,114 @@
+"""LMMA instruction descriptors + memory-size-based tile scheduler (§3.3).
+
+The paper extends MMA to ``lmma.{M}{N}{K}.{A}{W}{Acc}{O}``.  On TPU the
+"instruction" becomes a *kernel schedule contract*: an ``LMMADescriptor``
+names the tile shape and operand dtypes, and ``schedule_tiles`` picks
+BlockSpec block shapes for the Pallas kernels the way §3.3.2 prescribes —
+**tiling by memory size, not by shape**, because the A-side (table bytes) and
+W-side (packed code bytes) of an mpGEMM tile have wildly different densities.
+
+The scheduler objective mirrors Roller's rTile logic: choose the largest
+(bm, bn, bg) whose working set fits the VMEM budget, with bn elongated
+(table-reuse, §3.2.2) and hardware-aligned lane dims (multiples of 128).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["LMMADescriptor", "TileSchedule", "schedule_tiles", "lmma_name"]
+
+VMEM_BYTES = 64 * 1024 * 1024  # v5e VMEM ~128MB/2 cores -> 64MB usable/core
+LANE = 128
+SUBLANE = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class LMMADescriptor:
+    """lmma.{M}{N}{K}.{A}{W}{Acc}{O} — operand shapes and dtypes."""
+
+    m: int
+    n: int
+    k: int                      # contraction length (K_total)
+    a_dtype: str = "bf16"       # fp16/bf16/fp8/int8 activations
+    w_bits: int = 2             # INT1/2/4 weights (ternary -> 2 planes)
+    acc_dtype: str = "f32"
+    o_dtype: str = "bf16"
+    k_group: int = 4
+    table_bits: int = 8         # LUT_BIT after table quantization
+
+    def name(self) -> str:
+        return (f"lmma.m{self.m}n{self.n}k{self.k}."
+                f"a{self.a_dtype}.w int{self.w_bits}".replace(" ", "") +
+                f".acc{self.acc_dtype}.o{self.o_dtype}")
+
+
+def lmma_name(desc: LMMADescriptor) -> str:
+    return desc.name()
+
+
+@dataclasses.dataclass(frozen=True)
+class TileSchedule:
+    bm: int
+    bn: int
+    bg: int  # groups per K-block (K elements = bg * k_group)
+    table_bytes: int
+    weight_bytes: int
+    acc_bytes: int
+    vmem_bytes: int
+
+    @property
+    def bk(self) -> int:
+        return self.bg  # alias; K elements per block = bg * k_group
+
+
+_DTYPE_BYTES = {"fp16": 2, "bf16": 2, "f32": 4, "fp8": 1, "int8": 1, "int32": 4}
+
+
+def _tile_bytes(bm, bn, bg, desc: LMMADescriptor) -> Tuple[int, int, int]:
+    e = 1 << (desc.k_group - 1)
+    planes = desc.w_bits if desc.w_bits > 0 else 2
+    table = bm * bg * e * (desc.table_bits // 8 or 1)          # Eq. 7
+    weights = bn * bg * planes * desc.k_group // 8              # Eq. 8 packed
+    cw = bn * bg * e                                            # int8 CW expansion
+    acc = bm * bn * _DTYPE_BYTES[desc.acc_dtype]
+    return table, weights + cw, acc
+
+
+def schedule_tiles(desc: LMMADescriptor,
+                   vmem_budget: int = VMEM_BYTES,
+                   elongate: bool = True) -> TileSchedule:
+    """Pick (bm, bn, bg) by memory size (§3.3.2) with elongated N (§3.2.2)."""
+    g_total = desc.k / desc.k_group
+    best: Optional[TileSchedule] = None
+    bm_cands = [m for m in (8, 16, 32, 64, 128, 256) if m <= max(desc.m, 8)]
+    bn_cands = [n for n in (128, 256, 512, 1024, 2048) if n <= max(desc.n, LANE)]
+    bg_cands = [g for g in (8, 16, 32, 64, 128, 256, 512) if g <= max(g_total, 8)]
+    for bm in bm_cands:
+        for bn in bn_cands:
+            for bg in bg_cands:
+                t, w, a = _tile_bytes(bm, bn, bg, desc)
+                tot = 2 * (t + w) + a  # double-buffered inputs
+                if tot > vmem_budget:
+                    continue
+                cand = TileSchedule(bm, bn, bg, t, w, a, tot)
+                # score: MACs per byte moved (table reuse over bn — the
+                # elongation pressure, §3.2.2), tie-broken toward larger bn.
+                if best is None or _score(cand, desc, elongate) > _score(best, desc, elongate):
+                    best = cand
+    if best is None:
+        t, w, a = _tile_bytes(8, LANE, 8, desc)
+        best = TileSchedule(8, LANE, 8, t, w, a, 2 * (t + w) + a)
+    return best
+
+
+def _score(ts: TileSchedule, desc: LMMADescriptor, elongate: bool) -> float:
+    e = 1 << (desc.k_group - 1)
+    g_total = desc.k / desc.k_group
+    macs = ts.bm * ts.bn * ts.bg * e
+    score = macs / (ts.table_bytes + ts.weight_bytes
+                    + ts.acc_bytes / max(1, (g_total // ts.bg)))
+    if elongate:
+        score *= (1.0 + 0.1 * (ts.bn / 2048))
+    return score

@@ -1,0 +1,94 @@
+"""Public mpGEMM API — the paper's contribution as a composable JAX op.
+
+``mpgemm(x, qw, mode=...)`` multiplies high-precision activations with packed
+low-bit weights.  Modes:
+
+  * ``"dequant"``     — unpack→upcast→GEMM (paper Fig. 2b baseline; what a
+                        stock accelerator must do).
+  * ``"lut_xla"``     — LUT-based: DFG-split table precompute + single
+                        ``T @ CW`` GEMM (TPU-native lookup, DESIGN.md §2);
+                        with ``table_quant='per_row'`` the GEMM runs int8.
+  * ``"lut_pallas"``  — the Pallas LUT Tensor Core kernel (kernels/).
+  * ``"fp16"``        — dense float GEMM on dequantized weights cached as a
+                        regular array; reference/upper-precision path.
+
+The DFG transformation (§3.1.1) is first-class: ``precompute_tables`` is an
+independent operator whose result can be passed back via ``table=`` so the
+framework (or XLA fusion) amortizes it across every consumer — e.g. Q/K/V
+projections share one table of their common input.
+
+``mpgemm`` handles arbitrary leading batch dims; the contraction is always
+the last axis of ``x`` against ``qw.k_total``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import QuantizedWeight, dequantize
+from .table import Table, precompute_table
+
+__all__ = ["mpgemm", "precompute_tables", "MPGEMM_MODES"]
+
+MPGEMM_MODES = ("fp16", "dequant", "lut_xla", "lut_pallas")
+
+
+def precompute_tables(x, k_group: int = 4, table_quant: Optional[str] = "per_row") -> Table:
+    """Independent table-precompute operator (fuse me with your previous op)."""
+    lead = x.shape[:-1]
+    t = precompute_table(x.reshape(-1, x.shape[-1]), k_group, table_quant)
+    del lead  # table stays flat [M, G, E]; mpgemm reshapes the output
+    return t
+
+
+def _lut_xla(x2d, qw: QuantizedWeight, table_quant, table: Optional[Table]):
+    from repro.kernels import ref  # local import to avoid cycles
+
+    return ref.ref_lut_mpgemm_matmul(x2d, qw, table_quant=table_quant, table=table)
+
+
+def _lut_pallas(x2d, qw: QuantizedWeight, table_quant, table: Optional[Table], interpret):
+    from repro.kernels import ops
+
+    return ops.lut_mpgemm(x2d, qw, table_quant=table_quant, table=table,
+                          interpret=interpret)
+
+
+def mpgemm(
+    x: jax.Array,
+    qw: QuantizedWeight,
+    *,
+    mode: str = "lut_xla",
+    table_quant: Optional[str] = "per_row",
+    table: Optional[Table] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """y[..., n] = Σ_k x[..., k] · W[n, k] with W stored low-bit packed."""
+    if mode not in MPGEMM_MODES:
+        raise ValueError(f"mode {mode!r} not in {MPGEMM_MODES}")
+    if x.shape[-1] != qw.k_total:
+        raise ValueError(f"contract dim {x.shape[-1]} != k_total {qw.k_total}")
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, qw.k_total)
+
+    if mode == "fp16":
+        w = dequantize(qw).astype(x.dtype)
+        out = jnp.dot(x2d, w.T, preferred_element_type=jnp.float32)
+    elif mode == "dequant":
+        # Unpack + upcast happen *inside* the jitted graph: HLO parameter
+        # bytes stay truly low-bit; the upcast is the baseline's cost.
+        w = dequantize(qw).astype(jnp.bfloat16)
+        out = jnp.dot(x2d.astype(jnp.bfloat16), w.T,
+                      preferred_element_type=jnp.float32)
+    elif mode == "lut_xla":
+        out = _lut_xla(x2d, qw, table_quant, table)
+    else:  # lut_pallas
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        out = _lut_pallas(x2d, qw, table_quant, table, interpret)
+    return out.reshape(*lead, qw.n).astype(out_dtype)

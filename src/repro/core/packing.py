@@ -1,0 +1,66 @@
+"""Bit-level packing of folded group codes into dense uint8 streams.
+
+Storage format ("packed group codes", PGC): for each output channel n, the
+``k_group``-bit fields ``field(g, b) = sign<<(K-1) | idx`` are laid out
+**group-major** — position ``g*B + b`` for group g, bit-plane b — and packed
+little-endian into uint8.  This is the *HBM-resident* weight format — its
+byte count is exactly ``ceil(K_total * B / 8)`` per channel, i.e. true
+``B``-bit weights (the paper's storage claim), independent of k_group.
+
+Group-major layout means a K-block of ``bg`` consecutive groups occupies the
+contiguous byte range ``[g0*B*K/8, (g0+bg)*B*K/8)`` covering *all* planes,
+which is exactly what a K-blocked Pallas kernel wants to stream.
+
+k_group ∈ {1, 2, 4, 8} keeps fields byte-aligned (fields never straddle a
+byte), which the kernels exploit with shift/mask unpacking.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["pack_group_codes", "unpack_group_codes", "packed_bytes_per_channel"]
+
+_SUPPORTED_K = (1, 2, 4, 8)
+
+
+def packed_bytes_per_channel(k_total: int, bits: int) -> int:
+    return (k_total * bits + 7) // 8
+
+
+def _check(k_group: int):
+    if k_group not in _SUPPORTED_K:
+        raise ValueError(
+            f"k_group={k_group} not byte-aligned; supported: {_SUPPORTED_K}"
+        )
+
+
+def pack_group_codes(sign, idx, k_group: int):
+    """Pack (sign, idx) [N, G, B] into uint8 [N, ceil(G*B*k_group/8)]."""
+    _check(k_group)
+    n, g, b = idx.shape
+    field = (sign.astype(jnp.uint32) << (k_group - 1)) | idx.astype(jnp.uint32)
+    field = field.reshape(n, g * b)  # group-major: position g*B + b
+    fields_per_byte = 8 // k_group
+    pad = (-field.shape[1]) % fields_per_byte
+    if pad:
+        field = jnp.pad(field, ((0, 0), (0, pad)))
+    field = field.reshape(n, -1, fields_per_byte)
+    shifts = (k_group * jnp.arange(fields_per_byte, dtype=jnp.uint32))
+    packed = jnp.sum(field << shifts, axis=-1).astype(jnp.uint8)
+    return packed
+
+
+def unpack_group_codes(packed, k_group: int, g: int, bits: int):
+    """Inverse of :func:`pack_group_codes` -> (sign, idx) uint8 [N, G, B]."""
+    _check(k_group)
+    n = packed.shape[0]
+    fields_per_byte = 8 // k_group
+    mask = (1 << k_group) - 1
+    shifts = (k_group * jnp.arange(fields_per_byte, dtype=jnp.uint32))
+    field = (packed[..., None].astype(jnp.uint32) >> shifts) & mask
+    field = field.reshape(n, -1)[:, : g * bits]
+    field = field.reshape(n, g, bits)  # [N, G, B]
+    sign = (field >> (k_group - 1)).astype(jnp.uint8)
+    idx = (field & ((1 << (k_group - 1)) - 1)).astype(jnp.uint8)
+    return sign, idx

@@ -1,0 +1,146 @@
+"""Weight reinterpretation (paper §3.1.2, Eq. 1-6).
+
+The paper maps unsigned B-bit weight codes ``q ∈ {0..2^B-1}`` onto the
+symmetric *odd* grid::
+
+    q' = 2q - (2^B - 1)          (Eq. 2)   q' ∈ {-(2^B-1), ..., -1, +1, ..., 2^B-1}
+    s' = s / 2
+    z' = 2z + 1 - 2^B
+
+so that ``s (q - z) == s' (q' - z')`` (Eq. 3) — i.e. the represented real
+weight is unchanged, but the integer grid is now symmetric around zero.
+
+Two consequences power the whole design:
+
+1. **Exact bit-serial sign-plane decomposition.**  Writing
+   ``q = Σ_b 2^b q_b`` with ``q_b ∈ {0,1}`` gives
+
+       q' = Σ_b 2^b (2 q_b - 1) = Σ_b 2^b σ_b,      σ_b ∈ {-1, +1}
+
+   so a B-bit reinterpreted weight is *exactly* a sum of B ±1 planes with
+   power-of-two plane scales.  Every plane shares one lookup table.
+
+2. **Table symmetrization** (Eq. 4-5): the per-group table of a ±1 plane is
+   odd — ``LUT[w] = -LUT[~w]`` — so only ``2^(K-1)`` of ``2^K`` entries are
+   stored.  Eq. 6 folds the MSB-conditional bit negation into the *offline*
+   stored codes so no negation circuit / runtime bit-flip is needed.
+
+Ternary (BitNet b1.58) codes ``t ∈ {-1,0,1}`` are not on the odd grid but
+decompose into **two** ±1 planes with equal plane scales::
+
+    t = (σ_a + σ_b) / 2,   σ_a = +1 iff t >= 0,   σ_b = +1 iff t > 0
+
+which this module also provides (plane_scales = [1, 1], scale absorbs 1/2).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = [
+    "reinterpret_scale_zero",
+    "reinterpret_codes",
+    "codes_to_sign_planes",
+    "ternary_to_sign_planes",
+    "plane_scales_for",
+    "fold_msb_negation",
+    "unfold_group_codes",
+]
+
+
+def reinterpret_scale_zero(scale, zero, bits: int):
+    """Eq. 2: adjust (s, z) -> (s', z') for the symmetric odd grid."""
+    scale_p = scale / 2.0
+    zero_p = 2.0 * zero + 1.0 - (1 << bits)
+    return scale_p, zero_p
+
+
+def reinterpret_codes(q, bits: int):
+    """Eq. 2: unsigned codes q -> symmetric odd integers q' = 2q - (2^B - 1)."""
+    q = jnp.asarray(q)
+    return 2 * q.astype(jnp.int32) - ((1 << bits) - 1)
+
+
+def plane_scales_for(bits: int, ternary: bool = False) -> np.ndarray:
+    """Per-plane scales: [1,2,4,...] for the odd grid, [1,1] for ternary."""
+    if ternary:
+        return np.array([1.0, 1.0], dtype=np.float32)
+    return (2.0 ** np.arange(bits)).astype(np.float32)
+
+
+def codes_to_sign_planes(q, bits: int):
+    """Unsigned codes [.., K] -> sign planes σ_b ∈ {0,1} of shape [.., K, B].
+
+    Bit b of the code is plane b; plane value 1 means σ=+1, 0 means σ=-1.
+    Exactness: sum_b 2^b (2*plane_b - 1) == 2q - (2^B - 1) == q'.
+    """
+    q = jnp.asarray(q).astype(jnp.uint8)
+    shifts = jnp.arange(bits, dtype=jnp.uint8)
+    return ((q[..., None] >> shifts) & 1).astype(jnp.uint8)
+
+
+def ternary_to_sign_planes(t):
+    """Ternary codes {-1,0,1} [.., K] -> two {0,1} sign planes [.., K, 2].
+
+    plane_a = 1 iff t >= 0 ; plane_b = 1 iff t > 0 ;  (σ_a + σ_b)/2 == t.
+    """
+    t = jnp.asarray(t).astype(jnp.int32)
+    pa = (t >= 0).astype(jnp.uint8)
+    pb = (t > 0).astype(jnp.uint8)
+    return jnp.stack([pa, pb], axis=-1)
+
+
+def fold_msb_negation(planes, k_group: int):
+    """Eq. 6: offline fold of the MSB-conditional bit negation.
+
+    Args:
+      planes: {0,1} sign planes, shape [N, K, B]  (K divisible by k_group).
+      k_group: table group length K (paper uses 4; TPU DSE favours 2).
+
+    Returns:
+      sign: uint8 [N, G, B]   — 1 where the group's MSB plane-bit is 1
+                                (result must be negated at accumulate time),
+      idx:  uint8 [N, G, B]   — (k_group-1)-bit table index with the
+                                conditional bit-flip already applied.
+
+    Lookup semantics (ref oracle): for a group with raw pattern bits
+    ``w_0..w_{K-1}`` (σ_i = 2 w_i - 1) and half-table
+    ``T[e] = Σ_i a_i σ_i(e)`` built with σ_{K-1} = -1::
+
+        dot(a, σ) == (1 - 2*sign) * T[idx]
+    """
+    n, k, b = planes.shape
+    if k % k_group:
+        raise ValueError(f"K={k} not divisible by k_group={k_group}")
+    g = k // k_group
+    grp = planes.reshape(n, g, k_group, b)
+    msb = grp[:, :, k_group - 1, :]  # [N, G, B]
+    mask = (1 << (k_group - 1)) - 1
+    if k_group == 1:
+        idx = jnp.zeros((n, g, b), dtype=jnp.uint8)
+        return msb.astype(jnp.uint8), idx
+    weights = (1 << jnp.arange(k_group - 1, dtype=jnp.uint32)).astype(jnp.uint32)
+    # Reduce the (k_group-1) low bit positions (axis 2) into an integer index.
+    low = jnp.tensordot(
+        grp[:, :, : k_group - 1, :].astype(jnp.uint32), weights, axes=[[2], [0]]
+    ).astype(jnp.uint32)  # [N, G, B]
+    flipped = (~low) & mask
+    idx = jnp.where(msb.astype(bool), flipped, low).astype(jnp.uint8)
+    return msb.astype(jnp.uint8), idx
+
+
+def unfold_group_codes(sign, idx, k_group: int):
+    """Inverse of :func:`fold_msb_negation` — recover raw {0,1} plane bits.
+
+    Returns planes of shape [N, K, B].
+    """
+    n, g, b = idx.shape
+    mask = (1 << (k_group - 1)) - 1
+    low = jnp.where(sign.astype(bool), (~idx.astype(jnp.int32)) & mask, idx.astype(jnp.int32))
+    bits = []
+    for i in range(k_group - 1):
+        bits.append(((low >> i) & 1).astype(jnp.uint8))
+    bits.append(sign.astype(jnp.uint8))
+    grp = jnp.stack(bits, axis=2)  # [N, G, k_group, B]
+    return grp.reshape(n, g * k_group, b)

@@ -1,0 +1,129 @@
+"""Lookup-table precompute + symmetrization + table quantization (§3.1).
+
+The half-table for a K-group of activations ``a_0..a_{K-1}`` stores, for every
+entry ``e ∈ [0, 2^(K-1))``::
+
+    T[e] = Σ_{i<K-1} a_i * (2*bit_i(e) - 1)  -  a_{K-1}
+
+i.e. the MSB position is pinned to σ = -1 (entries with MSB=+1 are recovered
+by oddness, Eq. 4-5).  Precompute is *split out as an independent operator*
+(the paper's DFG transformation, §3.1.1) so callers can fuse it with the
+preceding element-wise op and share one table across all N output channels.
+
+Table quantization (§3.1.3) converts float entries to INT8 with a dynamic
+scale, either per-table (``per_group``, the paper's hardware choice) or
+per-activation-row (``per_row``, the TPU/XLA-friendly choice that lets the
+whole lookup run as one int8 GEMM — see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Table", "sign_basis", "precompute_table", "quantize_table", "table_entries"]
+
+
+class Table(NamedTuple):
+    """Precomputed (optionally quantized) lookup tables.
+
+    values:  [M, G, E] float32 or int8, E = 2^(k_group-1)
+    scale:   None (float tables) | [M, 1, 1] (per_row) | [M, G, 1] (per_group)
+    rowsum:  [M] float32 — Σ_k a[m,k], used for the zero-point correction term
+    k_group: group length K
+    """
+
+    values: jax.Array
+    scale: Optional[jax.Array]
+    rowsum: jax.Array
+    k_group: int
+
+
+@functools.lru_cache(maxsize=None)
+def _sign_basis_np(k_group: int) -> np.ndarray:
+    """[K, E] ±1 basis: column e holds (σ_0..σ_{K-1}) with σ_{K-1} = -1."""
+    e = 1 << (k_group - 1)
+    basis = np.empty((k_group, e), dtype=np.float32)
+    ent = np.arange(e)
+    for i in range(k_group - 1):
+        basis[i] = 2.0 * ((ent >> i) & 1) - 1.0
+    basis[k_group - 1] = -1.0
+    return basis
+
+
+def sign_basis(k_group: int) -> jax.Array:
+    return jnp.asarray(_sign_basis_np(k_group))
+
+
+def table_entries(a_groups: jax.Array, k_group: int) -> jax.Array:
+    """[..., G, K] activations -> [..., G, E] half-table entries.
+
+    One matmul against the ±1 basis; on TPU this runs on the MXU and is the
+    natural fusion target after the preceding element-wise op.
+    """
+    return jnp.einsum(
+        "...gk,ke->...ge", a_groups.astype(jnp.float32), sign_basis(k_group)
+    )
+
+
+def group_absmax(a_groups: jax.Array) -> jax.Array:
+    """Closed-form max_e |T[e]| = Σ_i |a_i| per group (oddness ⇒ achievable).
+
+    Using this identity (instead of materializing entries and reducing over
+    E) lets the per-row scale be computed from A *before* the table exists —
+    the kernel and the oracle share it bit-exactly.
+    """
+    return jnp.sum(jnp.abs(a_groups.astype(jnp.float32)), axis=-1)  # [..., G]
+
+
+def precompute_table(
+    a: jax.Array,
+    k_group: int = 4,
+    table_quant: Optional[str] = None,
+) -> Table:
+    """The independent precompute operator (DFG-transformed, §3.1.1).
+
+    Args:
+      a: activations [M, K_total], K_total divisible by k_group.
+      table_quant: None | 'per_group' | 'per_row' — INT8 table quantization.
+    """
+    m, k_total = a.shape
+    if k_total % k_group:
+        raise ValueError(f"K_total={k_total} not divisible by k_group={k_group}")
+    g = k_total // k_group
+    af = a.astype(jnp.float32)
+    rowsum = jnp.sum(af, axis=-1)
+    a_groups = af.reshape(m, g, k_group)
+    entries = table_entries(a_groups, k_group)
+    if table_quant is None:
+        return Table(entries, None, rowsum, k_group)
+    absmax = group_absmax(a_groups)  # [M, G]
+    return quantize_table(entries, rowsum, k_group, table_quant, absmax=absmax)
+
+
+def quantize_table(
+    entries: jax.Array, rowsum: jax.Array, k_group: int, mode: str,
+    absmax: Optional[jax.Array] = None,
+) -> Table:
+    """INT8 table quantization (§3.1.3) with dynamic absmax scaling."""
+    if absmax is None:
+        absmax = jnp.max(jnp.abs(entries), axis=-1)  # [M, G]
+    if mode == "per_group":
+        absmax = absmax[..., None]  # [M,G,1]
+    elif mode == "per_row":
+        absmax = jnp.max(absmax, axis=-1)[:, None, None]  # [M,1,1]
+    else:
+        raise ValueError(f"unknown table_quant mode {mode!r}")
+    scale = jnp.maximum(absmax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(entries / scale), -127, 127).astype(jnp.int8)
+    return Table(q, scale, rowsum, k_group)
+
+
+def dequantize_table(t: Table) -> jax.Array:
+    if t.scale is None:
+        return t.values
+    return t.values.astype(jnp.float32) * t.scale

@@ -1,0 +1,41 @@
+"""Collective helpers: overlap-friendly all-gather/reduce-scatter wrappers
+and the sequence-parallel boundary ops.
+
+Sequence parallelism (SP): between blocks, activations live sharded over the
+sequence dim on the data axis; attention/mpGEMM regions need the full
+sequence (all-gather in) and emit partial sums (reduce-scatter out). Under
+pjit these are expressed as sharding constraints — XLA inserts and schedules
+the collectives (and overlaps them with compute under
+--xla_tpu_enable_async_collective_*, see launch/train.py); these wrappers
+centralize the constraint patterns so models stay readable.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import current_plan
+
+
+def sp_scatter(x):
+    """Enter an SP region: shard the sequence dim (axis 1) over data."""
+    plan = current_plan()
+    if plan is None or plan.seq is None:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = plan.resolve("batch")
+    spec[1] = plan.seq
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(plan.mesh, P(*spec)))
+
+
+def sp_gather(x):
+    """Leave an SP region: replicate the sequence dim (all-gather over seq)."""
+    plan = current_plan()
+    if plan is None or plan.seq is None:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = plan.resolve("batch")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(plan.mesh, P(*spec)))

@@ -1,0 +1,74 @@
+"""Elastic re-meshing: shrink the data axis after host loss, rescale the
+batch schedule, and reshard the checkpointed state onto the new mesh.
+
+Elasticity model (data-parallel elasticity, the standard large-fleet
+policy): the model axes (model/TP, expert/EP, pp) are *rigid* — losing a TP
+shard makes the program non-runnable — so failures are absorbed by the
+replicated axis: data. Given F failed hosts we drop whole data-rows of the
+mesh, keep the global batch constant by raising microbatch accumulation, and
+resume from the latest checkpoint (params are data-replicated, so no state
+is lost).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import AxisPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticDecision:
+    old_data: int
+    new_data: int
+    microbatch_scale: int          # multiply grad-accum steps by this
+    dropped_rows: Tuple[int, ...]  # data-axis indices removed
+
+
+def plan_downsize(mesh_shape: Tuple[int, ...], axis_names: Tuple[str, ...],
+                  failed_flat_indices: List[int]) -> ElasticDecision:
+    """Choose the largest feasible data-axis size after failures.
+
+    Failures anywhere in a data-row kill that row (its TP/EP shards are
+    incomplete). The new data size is the count of intact rows, rounded down
+    to a power of two so batch rescaling stays integral.
+    """
+    shape = tuple(mesh_shape)
+    data_ax = axis_names.index("data")
+    grid = np.arange(int(np.prod(shape))).reshape(shape)
+    rows_axis = tuple(i for i in range(len(shape)) if i != data_ax)
+    failed = set(failed_flat_indices)
+    intact = []
+    dropped = []
+    for r in range(shape[data_ax]):
+        row = np.take(grid, r, axis=data_ax).ravel()
+        (dropped if any(int(d) in failed for d in row) else intact).append(r)
+    new_data = 1 << int(math.floor(math.log2(max(1, len(intact)))))
+    scale = shape[data_ax] // new_data
+    return ElasticDecision(shape[data_ax], new_data, scale, tuple(dropped))
+
+
+def remesh(plan: AxisPlan, decision: ElasticDecision) -> AxisPlan:
+    """Build the shrunken mesh from surviving devices (same axis names)."""
+    mesh = plan.mesh
+    names = mesh.axis_names
+    data_ax = names.index("data")
+    devs = mesh.devices
+    keep = [r for r in range(devs.shape[data_ax])
+            if r not in decision.dropped_rows][: decision.new_data]
+    new_devs = np.take(devs, keep, axis=data_ax)
+    new_mesh = Mesh(new_devs, names)
+    return dataclasses.replace(plan, mesh=new_mesh)
+
+
+def reshard_state(state, shardings_fn, new_plan: AxisPlan):
+    """Reshard a (restored) train state onto the new mesh."""
+    sh = shardings_fn(state, new_plan)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else x, state, sh)

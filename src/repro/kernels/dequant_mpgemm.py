@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: dequantization-based mpGEMM (paper Fig. 2b baseline).
+
+What a stock MAC datapath must do with low-bit weights: stream the packed
+codes, *upcast them to the activation dtype in-core*, then run a dense GEMM.
+Weight HBM traffic is identical to the LUT kernel (both stream the packed
+B-bit format); the difference is on-chip: this kernel pays the unpack +
+sign-reconstruct + int→float convert on the VPU and contracts A directly,
+while the LUT kernel amortizes K-element groups through the table.
+
+Shares the folded-storage format (Eq. 6): raw plane bits are recovered as
+``bit_i = idx_i XOR sign`` for i < K-1 and ``bit_{K-1} = sign``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["dequant_mpgemm_pallas"]
+
+
+def _unpack_w(packed_blk, *, k_group: int, planes: int,
+              plane_scales: Sequence[float], bn: int, bg: int):
+    """uint8 [bn, bg*B*K/8] -> reinterpreted weights q' [bn, bg*k_group] f32."""
+    fpb = 8 // k_group
+    mask = (1 << k_group) - 1
+    lowmask = (1 << (k_group - 1)) - 1
+    x = packed_blk.astype(jnp.int32)
+    shifts = (k_group * jnp.arange(fpb, dtype=jnp.int32))
+    fields = (x[:, :, None] >> shifts[None, None, :]) & mask
+    fields = fields.reshape(bn, bg, planes)
+    sign = fields >> (k_group - 1)
+    idx = fields & lowmask
+    w = jnp.zeros((bn, bg, k_group), jnp.float32)
+    for i in range(k_group - 1):
+        bit = ((idx >> i) & 1) ^ sign  # unfold Eq. 6
+        sigma = (2 * bit - 1).astype(jnp.float32)
+        qp = jnp.zeros((bn, bg), jnp.float32)
+        for b in range(planes):
+            qp = qp + float(plane_scales[b]) * sigma[:, :, b]
+        w = w.at[:, :, i].set(qp)
+    sigma_msb = (2 * sign - 1).astype(jnp.float32)
+    qp = jnp.zeros((bn, bg), jnp.float32)
+    for b in range(planes):
+        qp = qp + float(plane_scales[b]) * sigma_msb[:, :, b]
+    w = w.at[:, :, k_group - 1].set(qp)
+    return w.reshape(bn, bg * k_group)
+
+
+def _kernel(a_ref, pk_ref, ws_ref, o_ref, acc_ref, *, k_group: int,
+            planes: int, plane_scales, bn: int, bg: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _unpack_w(pk_ref[...], k_group=k_group, planes=planes,
+                  plane_scales=plane_scales, bn=bn, bg=bg)  # [bn, bk]
+    a = a_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        a, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...] * ws_ref[...]
+
+
+def dequant_mpgemm_pallas(
+    a: jax.Array,            # [M, K_total]
+    packed: jax.Array,       # [N, G*B*k_group/8] uint8
+    wscale: jax.Array,       # [N]
+    *,
+    k_group: int,
+    planes: int,
+    plane_scales: Sequence[float],
+    n: int,
+    block_m: int = 64,
+    block_n: int = 256,
+    block_g: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k_total = a.shape
+    g = k_total // k_group
+    assert m % block_m == 0 and n % block_n == 0 and g % block_g == 0
+    pb_blk = block_g * planes * k_group // 8
+    grid = (m // block_m, n // block_n, g // block_g)
+    kern = functools.partial(_kernel, k_group=k_group, planes=planes,
+                             plane_scales=tuple(map(float, plane_scales)),
+                             bn=block_n, bg=block_g)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_g * k_group), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, pb_blk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, packed, wscale.reshape(1, n).astype(jnp.float32))

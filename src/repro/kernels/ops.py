@@ -1,0 +1,162 @@
+"""Jit'd wrappers around the Pallas kernels.
+
+Handle padding to block multiples, table precompute (fused or supplied),
+per-row scale closed-form computation, zero-point correction (rank-1 update
+outside the kernel), and block-shape selection via the LMMA tile scheduler.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import table as table_mod
+from repro.core.lmma import LMMADescriptor, schedule_tiles
+from repro.core.quantize import QuantizedWeight
+from repro.core.table import Table
+from repro.kernels import ref
+from repro.kernels.dequant_mpgemm import dequant_mpgemm_pallas
+from repro.kernels.lut_mpgemm import lut_mpgemm_pallas
+from repro.kernels.table_precompute import table_precompute_pallas
+
+__all__ = ["table_precompute", "lut_mpgemm", "dequant_mpgemm", "pick_blocks"]
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def pick_blocks(m, n, g, k_group, planes, max_bm=256, max_bn=512, max_bg=512):
+    """Block shapes: scheduler-elongated but clamped to (padded) problem."""
+    desc = LMMADescriptor(m=m, n=n, k=g * k_group, w_bits=planes, k_group=k_group)
+    ts = schedule_tiles(desc)
+    bm = min(ts.bm, max_bm)
+    bn = min(ts.bn, max_bn)
+    bg = min(ts.bg, max_bg)
+    # keep K-blocks byte-aligned for the packed stream
+    while (bg * planes * k_group) % 8:
+        bg *= 2
+    return bm, bn, bg
+
+
+def table_precompute(a: jax.Array, k_group: int = 4,
+                     table_quant: Optional[str] = "per_row",
+                     *, block_m: int = 64, block_g: Optional[int] = None,
+                     interpret: bool = False) -> Table:
+    """Pallas-backed independent precompute operator (§3.1.1)."""
+    m, k_total = a.shape
+    g = k_total // k_group
+    block_m = min(block_m, m) if m % min(block_m, m) == 0 else block_m
+    ap = _pad_to(_pad_to(a, block_m, 0), 1, 1)
+    mp = ap.shape[0]
+    if block_g is None:
+        block_g = min(128, g)
+    gpad = (-g) % block_g
+    if gpad:
+        ap = jnp.pad(ap, ((0, 0), (0, gpad * k_group)))
+    rowsum = jnp.sum(a.astype(jnp.float32), axis=-1)
+    row_scale = None
+    if table_quant == "per_row":
+        am = table_mod.group_absmax(a.astype(jnp.float32).reshape(m, g, k_group))
+        row_scale = (jnp.maximum(jnp.max(am, axis=-1), 1e-30) / 127.0)[:, None]
+        row_scale = _pad_to(row_scale, block_m, 0)
+        row_scale = jnp.where(row_scale == 0, 1.0, row_scale)
+    values, scale = table_precompute_pallas(
+        ap, k_group, table_quant, row_scale,
+        block_m=block_m, block_g=block_g, interpret=interpret)
+    e = 1 << (k_group - 1)
+    values = values[:m, : g * e].reshape(m, g, e)
+    if table_quant is None:
+        return Table(values, None, rowsum, k_group)
+    if table_quant == "per_row":
+        return Table(values, row_scale[:m].reshape(m, 1, 1), rowsum, k_group)
+    return Table(values, scale[:m, :g].reshape(m, g, 1), rowsum, k_group)
+
+
+def lut_mpgemm(x: jax.Array, qw: QuantizedWeight, *,
+               table_quant: Optional[str] = "per_row",
+               table: Optional[Table] = None,
+               block_m: Optional[int] = None, block_n: Optional[int] = None,
+               block_g: Optional[int] = None,
+               interpret: bool = False) -> jax.Array:
+    """LUT mpGEMM via the Pallas kernel (table fused or precomputed)."""
+    m = x.shape[0]
+    g, e = qw.g, 1 << (qw.k_group - 1)
+    planes = qw.num_planes
+    bm, bn, bg = pick_blocks(m, qw.n, g, qw.k_group, planes)
+    bm = block_m or min(bm, max(8, m))
+    bn = block_n or min(bn, qw.n)
+    bg = block_g or min(bg, g)
+    if table is None:
+        table = table_precompute(x, qw.k_group, table_quant,
+                                 block_m=min(64, bm), interpret=interpret)
+    tv = table.values.reshape(m, g * e)
+    ts = None if table.scale is None else table.scale.reshape(m, -1)
+
+    # pad to block multiples
+    tvp = _pad_to(_pad_to(tv, bm, 0), bg * e, 1)
+    mp = tvp.shape[0]
+    gp = tvp.shape[1] // e
+    tsp = None
+    if ts is not None:
+        tsp = _pad_to(ts, bm, 0)
+        if ts.shape[1] != 1:  # per_group
+            tsp = _pad_to(tsp, bg, 1)
+        tsp = jnp.where(tsp == 0, 1.0, tsp)
+    pkp = qw.packed
+    pb_full = gp * planes * qw.k_group // 8
+    if pkp.shape[1] < pb_full:
+        pkp = jnp.pad(pkp, ((0, 0), (0, pb_full - pkp.shape[1])))
+    # NOTE: padded K-groups contribute sign=+? fields decoded from zero bytes:
+    # field 0 -> sign 0, idx 0 -> CW += Σ_b ps_b * onehot(0) ≠ 0 at entry 0.
+    # But the padded *table values* are 0 (A padded with zeros), so padded
+    # groups contribute 0 regardless of CW. Padding along N handled below.
+    pkp = _pad_to(pkp, bn, 0)
+    wsp = _pad_to(qw.scale.astype(jnp.float32), bn, 0)
+    np_ = pkp.shape[0]
+
+    out = lut_mpgemm_pallas(
+        tvp, tsp, pkp, wsp, k_group=qw.k_group, planes=planes,
+        plane_scales=qw.plane_scales,
+        n=np_, block_m=bm, block_n=bn, block_g=bg, interpret=interpret)
+    out = out[:m, :qw.n]
+    return ref.zero_point_correction(out, qw, table.rowsum)
+
+
+def dequant_mpgemm(x: jax.Array, qw: QuantizedWeight, *,
+                   block_m: int = 64, block_n: int = 256, block_g: int = 64,
+                   interpret: bool = False) -> jax.Array:
+    m = x.shape[0]
+    g = qw.g
+    planes = qw.num_planes
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, qw.n)
+    bg = min(block_g, g)
+    while (bg * planes * qw.k_group) % 8:
+        bg *= 2
+    xp = _pad_to(_pad_to(x, bm, 0), bg * qw.k_group, 1)
+    mp, kp = xp.shape
+    gp = kp // qw.k_group
+    pkp = qw.packed
+    pb_full = gp * planes * qw.k_group // 8
+    if pkp.shape[1] < pb_full:
+        pkp = jnp.pad(pkp, ((0, 0), (0, pb_full - pkp.shape[1])))
+    pkp = _pad_to(pkp, bn, 0)
+    wsp = _pad_to(qw.scale.astype(jnp.float32), bn, 0)
+    out = dequant_mpgemm_pallas(
+        xp, pkp, wsp, k_group=qw.k_group, planes=planes,
+        plane_scales=qw.plane_scales,
+        n=pkp.shape[0], block_m=bm, block_n=bn, block_g=bg,
+        interpret=interpret)[:m, :qw.n]
+    if qw.zero_prime is not None:
+        rowsum = jnp.sum(x.astype(jnp.float32), axis=-1)
+        out = ref.zero_point_correction(out, qw, rowsum)
+    return out

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: LUT table precompute (+ fused INT8 table quantization).
+
+The DFG-transformed precompute operator (§3.1.1) as a standalone kernel:
+activations stream HBM→VMEM once, each [bm, bg·K] block is contracted with
+the ±1 sign basis on the MXU to produce the [bm, bg·E] half-table block, and
+(optionally) quantized to INT8 in-VMEM before the store — so the table that
+lands in HBM is already LUT_BIT=8 (Eq. 7's table-size term).
+
+Per-row scales are computed from A in closed form (Σ|a_i| per group, maxed
+over groups — see table.group_absmax) by the wrapper and passed in, so this
+kernel stays a single pass.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["table_precompute_pallas"]
+
+
+def _sign_basis_iota(k_group: int):
+    """±1 basis [K, E] built from iota (pallas kernels cannot capture consts)."""
+    e = 1 << (k_group - 1)
+    ent = jax.lax.broadcasted_iota(jnp.int32, (k_group, e), 1)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (k_group, e), 0)
+    bit = (ent >> pos) & 1
+    basis = jnp.where(pos == k_group - 1, -1.0,
+                      2.0 * bit.astype(jnp.float32) - 1.0)
+    return basis
+
+
+def _kernel(a_ref, ts_ref, tq_ref, *, k_group: int, bm: int, bg: int,
+            mode: Optional[str]):
+    e = 1 << (k_group - 1)
+    a = a_ref[...].astype(jnp.float32).reshape(bm, bg, k_group)
+    basis = _sign_basis_iota(k_group)  # [K, E], materialized in VMEM
+    ent = jax.lax.dot_general(
+        a.reshape(bm * bg, k_group), basis, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(bm, bg, e)
+    if mode is None:
+        tq_ref[...] = ent.reshape(bm, bg * e)
+        return
+    if mode == "per_group":
+        absmax = jnp.sum(jnp.abs(a), axis=-1)  # [bm, bg] closed form
+        scale = jnp.maximum(absmax, 1e-30) / 127.0
+        ts_ref[...] = scale
+        q = ent / scale[:, :, None]
+    else:  # per_row: scale computed by wrapper, streamed in
+        q = ent / ts_ref[...].reshape(bm, 1, 1)
+    tq_ref[...] = jnp.clip(jnp.round(q), -127, 127).astype(jnp.int8).reshape(
+        bm, bg * e)
+
+
+def table_precompute_pallas(
+    a: jax.Array,             # [M, K_total] (pre-padded to blocks)
+    k_group: int,
+    table_quant: Optional[str],
+    row_scale: Optional[jax.Array] = None,  # [M, 1] f32, required for per_row
+    *,
+    block_m: int = 64,
+    block_g: int = 128,
+    interpret: bool = False,
+):
+    """Returns (values [M, G*E], scale or None). Rowsum is wrapper-side."""
+    m, k_total = a.shape
+    g = k_total // k_group
+    e = 1 << (k_group - 1)
+    assert m % block_m == 0 and g % block_g == 0, ((m, g), (block_m, block_g))
+    grid = (m // block_m, g // block_g)
+    kern = functools.partial(_kernel, k_group=k_group, bm=block_m, bg=block_g,
+                             mode=table_quant)
+    out_dtype = jnp.float32 if table_quant is None else jnp.int8
+
+    in_specs = [pl.BlockSpec((block_m, block_g * k_group), lambda i, k: (i, k))]
+    if table_quant == "per_row":
+        assert row_scale is not None
+        in_specs.append(pl.BlockSpec((block_m, 1), lambda i, k: (i, 0)))
+        ts_arg = row_scale.astype(jnp.float32)
+        out_specs = pl.BlockSpec((block_m, block_g * e), lambda i, k: (i, k))
+        out_shape = jax.ShapeDtypeStruct((m, g * e), out_dtype)
+        values = pl.pallas_call(
+            kern, grid=grid, in_specs=in_specs, out_specs=out_specs,
+            out_shape=out_shape,
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel")),
+            interpret=interpret,
+        )(a, ts_arg)
+        return values, row_scale
+    if table_quant == "per_group":
+        out_specs = [
+            pl.BlockSpec((block_m, block_g), lambda i, k: (i, k)),      # scale
+            pl.BlockSpec((block_m, block_g * e), lambda i, k: (i, k)),  # values
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((m, g), jnp.float32),
+            jax.ShapeDtypeStruct((m, g * e), out_dtype),
+        ]
+
+        def kern2(a_ref, ts_ref, tq_ref):
+            kern(a_ref, ts_ref, tq_ref)
+
+        scale, values = pl.pallas_call(
+            kern2, grid=grid, in_specs=in_specs[:1], out_specs=out_specs,
+            out_shape=out_shape,
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel")),
+            interpret=interpret,
+        )(a)
+        return values, scale
+    # float table
+    out_specs = pl.BlockSpec((block_m, block_g * e), lambda i, k: (i, k))
+    out_shape = jax.ShapeDtypeStruct((m, g * e), out_dtype)
+
+    def kern3(a_ref, tq_ref):
+        kern(a_ref, None, tq_ref)
+
+    values = pl.pallas_call(
+        kern3, grid=grid, in_specs=in_specs[:1], out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(a)
+    return values, None

@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell, print memory/cost analysis, and emit roofline terms.
+
+MUST be run as its own process (the two lines above must execute before any
+jax import anywhere — jax locks the device count at first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--out results.json] [--mode paper|...]
+
+Steps lowered per shape kind:
+  train   — full train step (QAT fwd per cfg.quant, loss, grads, optimizer
+            update; adafactor for the 1T-param config, adamw otherwise)
+  prefill — serve-quantized forward, last-token logits + KV caches out
+  decode  — serve-quantized single-token step against an S-long cache
+
+No real arrays are allocated: params/inputs/caches are ShapeDtypeStructs
+(jax.eval_shape for the trees), and .lower().compile() proves the sharded
+program exists (the pod axis shards in the multi-pod pass).
+"""
+
+import argparse
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.distributed.sharding import named_sharding_tree, plan_scope
+from repro.launch.mesh import make_plan, make_production_mesh
+from repro.models import api
+from repro.models.transformer import lm_loss
+from repro.roofline import analysis
+from repro.training import optimizer as opt_mod
+from repro.training.train_loop import init_train_state, make_train_step, train_shardings
+
+
+# ---------------------------------------------------------------------------
+# sharding heuristics for inputs/caches
+# ---------------------------------------------------------------------------
+
+def _batch_axes(plan):
+    return plan.batch if len(plan.batch) > 1 else plan.batch[0]
+
+
+def input_shardings(specs, plan, batch_size):
+    """Tokens/labels/frames: shard dim0 (batch) over the batch axes."""
+    mesh = plan.mesh
+    bsz = _mesh_size(plan)
+
+    def one(x):
+        spec = [None] * len(x.shape)
+        if x.shape and x.shape[0] == batch_size and batch_size % bsz == 0:
+            spec[0] = _batch_axes(plan)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, specs)
+
+
+def _mesh_size(plan):
+    sizes = dict(zip(plan.mesh.axis_names, plan.mesh.devices.shape))
+    return int(jnp.prod(jnp.asarray([sizes[a] for a in plan.batch])))
+
+
+def cache_shardings(cache_specs, plan, batch_size):
+    """Caches: batch dim over data axes; a head/feature dim over model.
+
+    Rules (see DESIGN.md §4): attention [*,B,S,KV,hd] shards KV over model
+    when divisible else hd; mamba conv [*,B,W,di] shards di; mamba ssm
+    states shard d_inner / heads. Any non-divisible dim is replicated.
+    """
+    mesh = plan.mesh
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = sizes.get(plan.model, 1)
+    bsz = _mesh_size(plan)
+
+    def one(path, x):
+        pstr = jax.tree_util.keystr(path)
+        shape = x.shape
+        spec = [None] * len(shape)
+        # batch dim: first dim equal to batch_size (skip dim 0 when it's a
+        # layer-stack dim of the same size is unlikely; search left to right)
+        if batch_size > 1 and batch_size % bsz == 0:
+            for i, d in enumerate(shape):
+                if d == batch_size:
+                    spec[i] = _batch_axes(plan)
+                    break
+        if "conv" in pstr:
+            if shape[-1] % msize == 0:
+                spec[-1] = plan.model
+        elif "ssm" in pstr or "mamba" in pstr or "tail" in pstr:
+            if shape[-2] % msize == 0 and spec[-2] is None:
+                spec[-2] = plan.model
+            elif shape[-1] % msize == 0 and spec[-1] is None:
+                spec[-1] = plan.model
+        elif len(shape) >= 4:
+            # attention caches [*, B, S, KV, hd] (+ scale [*, B, S, KV, 1]):
+            # shard the SEQUENCE over model for flash-decode (§Perf B4);
+            # fall back to kv/hd sharding when S is not divisible.
+            if shape[-3] % msize == 0 and spec[-3] is None and shape[-3] >= msize:
+                spec[-3] = plan.model
+            elif shape[-2] % msize == 0 and spec[-2] is None:
+                spec[-2] = plan.model
+            elif shape[-1] % msize == 0 and spec[-1] is None and shape[-1] > 1:
+                spec[-1] = plan.model
+        elif len(shape) >= 3:
+            if shape[-2] % msize == 0 and spec[-2] is None:
+                spec[-2] = plan.model
+            elif shape[-1] % msize == 0 and spec[-1] is None:
+                spec[-1] = plan.model
+        return NamedSharding(mesh, P(*spec))
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(cache_specs)
+    return jax.tree_util.tree_unflatten(
+        tdef, [one(p, l) for p, l in flat])
+
+
+# ---------------------------------------------------------------------------
+# step builders (lower-ready closures over cfg)
+# ---------------------------------------------------------------------------
+
+def train_microbatches(cfg) -> int:
+    """Gradient-accumulation policy (§Perf T2): the scan-over-layers carry
+    saves B·S·D bytes per layer for backward; microbatching divides it.
+    Measured on qwen2-72b(4L): temp 32.8 -> 6.6 GiB/dev at 8 microbatches,
+    and t_collective also fell 3x (per-microbatch FSDP gathers pipeline)."""
+    n = cfg.num_params()
+    if n > 2e10:
+        return 16
+    if n > 2e9:
+        return 8
+    return 4
+
+
+def build_train(cfg, plan):
+    opt_name = "adafactor" if cfg.arch_id.startswith("kimi") else "adamw"
+    opt = opt_mod.make_optimizer(opt_name, lr=1e-4)
+    step_fn = make_train_step(cfg, opt, qat=True,
+                              microbatches=train_microbatches(cfg))
+    state_specs = jax.eval_shape(
+        functools.partial(init_train_state, cfg=cfg, opt=opt),
+        jax.random.key(0))
+    state_sh = train_shardings(state_specs, plan)
+
+    def fn(state, batch):
+        with plan_scope(plan):
+            return step_fn(state, batch)
+
+    return fn, state_specs, state_sh
+
+
+def build_prefill(cfg, plan, shape):
+    serve_q = not (cfg.quant or {}).get("mpgemm_mode") == "fp16"
+    pspecs = api.param_specs(cfg, serve_quantized=serve_q)
+    p_sh = named_sharding_tree(pspecs, plan)
+    cspecs = api.cache_specs(cfg, shape)
+    c_sh = cache_shardings(cspecs, plan, shape.global_batch)
+
+    def fn(params, caches, batch):
+        with plan_scope(plan):
+            logits, new_caches, _ = api.forward(
+                params, batch, cfg, caches=caches, cache_pos=0,
+                window=shape.window)
+            return logits[:, -1], new_caches
+
+    return fn, (pspecs, p_sh), (cspecs, c_sh)
+
+
+def build_decode(cfg, plan, shape):
+    serve_q = not (cfg.quant or {}).get("mpgemm_mode") == "fp16"
+    pspecs = api.param_specs(cfg, serve_quantized=serve_q)
+    p_sh = named_sharding_tree(pspecs, plan)
+    cspecs = api.cache_specs(cfg, shape)
+    c_sh = cache_shardings(cspecs, plan, shape.global_batch)
+
+    def fn(params, caches, batch):
+        with plan_scope(plan):
+            logits, new_caches, _ = api.forward(
+                params, batch, cfg, caches=caches,
+                cache_pos=batch["cache_pos"], window=shape.window)
+            return logits[:, -1], new_caches
+
+    return fn, (pspecs, p_sh), (cspecs, c_sh)
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry run
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, mode: str = None,
+             kv: str = None, store: str = None, k_group: int = None):
+    cfg = registry.get_config(arch)
+    if mode:  # override the mpGEMM execution mode (hillclimb lever)
+        cfg = cfg.with_quant(mpgemm_mode=mode)
+    if store:  # "cw": offline-expanded lookup weights (§Perf B1)
+        cfg = cfg.with_quant(store=store)
+    if k_group:
+        cfg = cfg.with_quant(k_group=k_group)
+    if kv:  # "int8": quantized KV cache (§Perf B3)
+        cfg = cfg.replace(kv_cache_dtype=kv)
+    shape = cfg.shape(shape_name)
+    if shape.skip:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": shape.skip}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # FSDP (ZeRO-3) only for training: re-gathering serving weights every
+    # decode step costs ~16 GiB/step of all-gathers (Perf B5) — inference
+    # params are TP-sharded over model and replicated over data.
+    plan = make_plan(mesh, fsdp=(shape.kind == "train"))
+    n_dev = mesh.devices.size
+    t0 = time.time()
+
+    if shape.kind == "train":
+        fn, state_specs, state_sh = build_train(cfg, plan)
+        in_specs = api.input_specs(cfg, shape)
+        in_sh = input_shardings(in_specs, plan, shape.global_batch)
+        lowered = jax.jit(fn, in_shardings=(state_sh, in_sh),
+                          donate_argnums=(0,)).lower(state_specs, in_specs)
+        model_flops = 6 * cfg.active_params() * shape.global_batch * shape.seq_len
+    else:
+        builder = build_prefill if shape.kind == "prefill" else build_decode
+        fn, (pspecs, p_sh), (cspecs, c_sh) = builder(cfg, plan, shape)
+        in_specs = api.input_specs(cfg, shape)
+        if "cache_pos" in in_specs:
+            in_specs = dict(in_specs)
+        in_sh = input_shardings(in_specs, plan, shape.global_batch)
+        lowered = jax.jit(fn, in_shardings=(p_sh, c_sh, in_sh),
+                          donate_argnums=(1,)).lower(pspecs, cspecs, in_specs)
+        tokens = (shape.global_batch * shape.seq_len
+                  if shape.kind == "prefill" else shape.global_batch)
+        model_flops = 2 * cfg.active_params() * tokens
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    min_bytes = (mem.argument_size_in_bytes
+                 + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    roof = analysis.analyze(compiled, n_devices=n_dev, model_flops=model_flops,
+                            hlo_text=hlo, min_bytes=min_bytes)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "kind": shape.kind,
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device": (mem.argument_size_in_bytes
+                                + mem.output_size_in_bytes
+                                + mem.temp_size_in_bytes
+                                - mem.alias_size_in_bytes),
+        },
+        "roofline": roof.to_dict(),
+    }
+    del compiled, lowered, hlo
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id (default all)")
+    ap.add_argument("--shape", default=None, help="single shape (default all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--mode", default=None,
+                    help="override mpgemm mode: fp16|dequant|lut_xla")
+    ap.add_argument("--kv", default=None, help="kv cache dtype: int8")
+    ap.add_argument("--store", default=None, help="weight store: cw")
+    ap.add_argument("--k-group", type=int, default=None)
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else registry.ASSIGNED
+    shapes = ([args.shape] if args.shape
+              else ["train_4k", "prefill_32k", "decode_32k", "long_500k"])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    if args.append and os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("mode")) for r in results}
+
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                key = (arch, shape, "multi" if multi else "single", args.mode)
+                if key in done:
+                    continue
+                label = f"{arch} × {shape} × {'multi' if multi else 'single'}"
+                print(f"=== {label} ===", flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi, args.mode, args.kv,
+                                   args.store, args.k_group)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                if args.mode or args.kv or args.store or args.k_group:
+                    rec["mode"] = "+".join(filter(None, [
+                        args.mode, args.kv and f"kv{args.kv}",
+                        args.store and f"store_{args.store}",
+                        args.k_group and f"kg{args.k_group}"]))
+                results.append(rec)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(f"  ok: compile {rec['compile_s']}s  "
+                          f"peak/dev {rec['memory']['peak_per_device']/2**30:.2f} GiB  "
+                          f"t(comp/mem/coll) = {r['t_compute']:.2e}/"
+                          f"{r['t_memory']:.2e}/{r['t_collective']:.2e}s  "
+                          f"dominant={r['dominant']}  "
+                          f"roofline={r['roofline_fraction']:.3f}", flush=True)
+                elif rec["status"] == "skipped":
+                    print(f"  skipped: {rec['reason']}", flush=True)
+                else:
+                    print(f"  ERROR: {rec['error']}", flush=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\n{n_ok} ok, {n_err} errors, "
+          f"{sum(r['status'] == 'skipped' for r in results)} skipped")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

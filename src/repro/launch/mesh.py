@@ -1,0 +1,41 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import AxisType
+
+from repro.distributed.sharding import AxisPlan
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_pipeline_mesh(*, pp: int = 4, data: int = 8, model: int = 16):
+    """3D mesh with a pipeline axis (pp × data × model)."""
+    return jax.make_mesh((pp, data, model), ("pp", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
+
+
+def make_plan(mesh, *, fsdp: bool = True, seq_parallel: bool = False) -> AxisPlan:
+    multi_pod = "pod" in mesh.axis_names
+    return AxisPlan(
+        mesh=mesh,
+        batch=("pod", "data") if multi_pod else ("data",),
+        model="model",
+        expert="model",
+        fsdp="data" if fsdp else None,
+        seq="data" if seq_parallel else None,
+        stage="pp" if "pp" in mesh.axis_names else None,
+    )

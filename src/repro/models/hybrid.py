@@ -1,0 +1,159 @@
+"""Zamba2-style hybrid: mamba2 backbone + one *shared* attention block.
+
+Structure: ``n_groups`` groups of (``attn_every`` mamba2 layers, then the
+shared attention+MLP block), plus a tail of leftover mamba2 layers.  The
+shared block has ONE set of weights reused at every invocation (zamba2's
+parameter-efficiency trick) but each invocation owns a separate KV cache
+(stacked [n_groups, ...]).
+
+The mamba params are stacked [n_groups, attn_every, ...] so the forward is a
+scan over groups with an inner scan over the group's mamba layers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain_tree, shard
+from repro.models import kvcache, layers as L, ssm
+from repro.models import transformer as TR
+
+Params = Dict[str, Any]
+
+
+def _shared_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": L.norm_init(cfg.d_model, dtype),
+        "shared_attn": L.attention_init(k1, cfg, dtype=dtype),
+        "mlp_norm": L.norm_init(cfg.d_model, dtype),
+        "shared_mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype=dtype),
+    }
+
+
+def _mamba_layer_init(key, cfg, dtype):
+    return {"norm": L.norm_init(cfg.d_model, dtype),
+            "ssm": ssm.mamba2_init(key, cfg, dtype)}
+
+
+def init(key, cfg, dtype=None) -> Params:
+    dtype = dtype or cfg.param_dtype
+    k_e, k_m, k_t, k_s, k_h = jax.random.split(key, 5)
+    n_groups = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers % cfg.attn_every
+    gkeys = jax.random.split(k_m, n_groups * cfg.attn_every).reshape(
+        n_groups, cfg.attn_every)
+    params = {
+        "embed": TR.embed_init(k_e, cfg.vocab_size, cfg.d_model, dtype),
+        "groups": jax.vmap(jax.vmap(lambda k: _mamba_layer_init(k, cfg, dtype)))(gkeys),
+        "shared": _shared_block_init(k_s, cfg, dtype),
+        "final_norm": L.norm_init(cfg.d_model, dtype),
+        "lm_head": L.dense_init(k_h, cfg.d_model, cfg.vocab_size, dtype=dtype),
+    }
+    if tail:
+        tkeys = jax.random.split(k_t, tail)
+        params["tail"] = jax.vmap(lambda k: _mamba_layer_init(k, cfg, dtype))(tkeys)
+    return params
+
+
+def _mamba_layer_apply(p, h, cfg, cache, quant):
+    y, nc = ssm.mamba2_apply(p["ssm"], L.rms_norm(p["norm"], h, cfg.norm_eps),
+                             cfg, cache=cache, quant=quant)
+    return shard(h + y, "batch", "seq", None), nc
+
+
+def _shared_apply(p, h, cfg, kv, cache_pos, window, quant):
+    a, kv = L.attention_apply(
+        p["shared_attn"], L.rms_norm(p["attn_norm"], h, cfg.norm_eps), cfg,
+        kv_cache=kv, cache_pos=cache_pos, window=window, quant=quant)
+    h = shard(h + a, "batch", "seq", None)
+    m = L.mlp_apply(p["shared_mlp"], L.rms_norm(p["mlp_norm"], h, cfg.norm_eps),
+                    quant)
+    return shard(h + m, "batch", "seq", None), kv
+
+
+def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
+            window=None) -> Tuple[jax.Array, Any, Dict]:
+    tokens = batch["tokens"]
+    quant = cfg.quant
+    h = TR.embed_apply(params["embed"], tokens).astype(cfg.activation_dtype)
+    n_groups = cfg.n_layers // cfg.attn_every
+
+    gm_caches = kv_caches = tail_caches = None
+    if caches is not None:
+        gm_caches, kv_caches, tail_caches = (
+            caches["mamba"], caches["kv"], caches.get("tail"))
+
+    def group_body(carry, xs):
+        hh = carry
+        if gm_caches is None:
+            gp = xs
+            mcache = None
+        else:
+            gp, (mcache, kvc) = xs[0], (xs[1], xs[2])
+
+        def inner(c, lxs):
+            lp = lxs if mcache is None else lxs[0]
+            lp = constrain_tree(lp)  # §Perf T1
+            lc = None if mcache is None else lxs[1]
+            c2, nc = _mamba_layer_apply(lp, c, cfg, lc, quant)
+            return c2, nc
+
+        inner = jax.checkpoint(inner, prevent_cse=False)
+        ixs = gp if mcache is None else (gp, mcache)
+        hh, new_m = jax.lax.scan(inner, hh, ixs)
+        kvc_in = None if gm_caches is None else kvc
+        hh, new_kv = _shared_apply(params["shared"], hh, cfg, kvc_in,
+                                   cache_pos, window, quant)
+        if gm_caches is None:
+            return hh, None
+        return hh, (new_m, new_kv)
+
+    group_body = jax.checkpoint(group_body, prevent_cse=False)
+    xs = (params["groups"] if gm_caches is None
+          else (params["groups"], gm_caches, kv_caches))
+    h, new_group_caches = jax.lax.scan(group_body, h, xs)
+
+    new_tail = None
+    if "tail" in params:
+        def tbody(c, lxs):
+            lp = lxs if tail_caches is None else lxs[0]
+            lp = constrain_tree(lp)  # §Perf T1
+            lc = None if tail_caches is None else lxs[1]
+            return _mamba_layer_apply(lp, c, cfg, lc, quant)
+        tbody = jax.checkpoint(tbody, prevent_cse=False)
+        txs = params["tail"] if tail_caches is None else (params["tail"], tail_caches)
+        h, new_tail = jax.lax.scan(tbody, h, txs)
+
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    logits = TR.head_apply(params["lm_head"], h, quant)
+    new_caches = None
+    if caches is not None:
+        new_m, new_kv = new_group_caches
+        new_caches = {"mamba": new_m, "kv": new_kv}
+        if new_tail is not None:
+            new_caches["tail"] = new_tail
+    return logits, new_caches, {}
+
+
+def init_cache(cfg, batch: int, s_cache: int, window=None, dtype=jnp.bfloat16):
+    n_groups = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers % cfg.attn_every
+    hd = cfg.d_inner // cfg.ssm_heads
+    m = kvcache.mamba2_cache(n_groups * cfg.attn_every, batch, cfg.ssm_heads,
+                             hd, cfg.ssm_state, cfg.d_inner, cfg.d_conv)
+    m = jax.tree.map(
+        lambda c: c.reshape((n_groups, cfg.attn_every) + c.shape[1:]), m)
+    caches = {
+        "mamba": m,
+        "kv": kvcache.attn_cache(n_groups, batch, s_cache, cfg.n_kv_heads,
+                                 cfg.head_dim, dtype, window),
+    }
+    if tail:
+        caches["tail"] = kvcache.mamba2_cache(
+            tail, batch, cfg.ssm_heads, hd, cfg.ssm_state, cfg.d_inner,
+            cfg.d_conv)
+    return caches

@@ -1,0 +1,53 @@
+"""KV / SSM state caches.
+
+Caches are plain pytrees stacked over layers (leading L dim) so the decode
+step scans over (layer_params, layer_cache) together.
+
+  * attention: (k, v) each [L, B, S_cache, KV, hd]; ``S_cache`` is the max
+    sequence length, or the window size for rolling sliding-window caches
+    (the sub-quadratic long-context decode path, long_500k).
+  * mamba: {"conv": [L, B, d_conv-1, d_inner], "ssm": [L, B, ...state]}.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = ["attn_cache", "mamba_cache", "mamba2_cache", "cache_len"]
+
+
+def attn_cache(n_layers: int, batch: int, s_cache: int, n_kv: int, head_dim: int,
+               dtype=jnp.bfloat16, window: Optional[int] = None):
+    """dtype may be a jnp dtype or the string "int8" — the int8 variant
+    (KV-cache quantization, paper §5) returns (k, v, k_scale, v_scale) with
+    per-(position, head) absmax scales; attention dequantizes per chunk."""
+    s = min(s_cache, window) if window else s_cache
+    shape = (n_layers, batch, s, n_kv, head_dim)
+    if dtype == "int8" or dtype == jnp.int8:
+        sshape = (n_layers, batch, s, n_kv, 1)
+        return (jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                jnp.ones(sshape, jnp.float32), jnp.ones(sshape, jnp.float32))
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def mamba_cache(n_layers: int, batch: int, d_inner: int, d_state: int,
+                d_conv: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((n_layers, batch, d_conv - 1, d_inner), dtype),
+        "ssm": jnp.zeros((n_layers, batch, d_inner, d_state), dtype),
+    }
+
+
+def mamba2_cache(n_layers: int, batch: int, n_heads: int, head_dim: int,
+                 d_state: int, d_inner: int, d_conv: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((n_layers, batch, d_conv - 1, d_inner), dtype),
+        "ssm": jnp.zeros((n_layers, batch, n_heads, head_dim, d_state), dtype),
+    }
+
+
+def cache_len(cache) -> int:
+    """Sequence capacity of an attention cache."""
+    return cache[0].shape[2]

@@ -1,0 +1,69 @@
+"""Convert float param trees to packed low-bit serving trees.
+
+Walks the params pytree; every quantizable projection ``{"w": [in,out]}``
+becomes ``{"qw": QuantizedWeight}`` (bias kept), and stacked MoE expert
+weights [E, d_in, d_out] become batched QuantizedWeights (vmapped quantize).
+
+Never quantized (DESIGN.md §5): embedding table, MoE router, norms, gates,
+conv taps, SSM A/D/dt vectors, positional tables.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as Q
+
+# parent dict names whose "w" is a quantizable projection
+_QUANTIZABLE = re.compile(
+    r"(wq|wk|wv|wo|gate|up|down|in_proj|out_proj|x_proj|dt_proj|lm_head)$")
+_NEVER = re.compile(r"(router|embed|pos_embed)")
+
+
+def _quantize_2d(w, quant) -> Q.QuantizedWeight:
+    qw = Q.quantize(w.T, quant.get("weight_bits", 2),
+                    k_group=quant.get("k_group", 4),
+                    scheme=quant.get("scheme", "symmetric"))
+    if quant.get("store") == "cw":
+        qw = Q.to_cw_format(qw)
+    return qw
+
+
+def quantize_params(params: Dict[str, Any], quant: dict) -> Dict[str, Any]:
+    """Returns a new tree with projections replaced by packed weights."""
+    kg = quant.get("k_group", 4)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if "w" in node and _QUANTIZABLE.search(path) and not _NEVER.search(path):
+                w = node["w"]
+                if w.ndim == 2 and w.shape[0] % kg == 0:
+                    out = {"qw": _quantize_2d(w, quant)}
+                    if "b" in node:
+                        out["b"] = node["b"]
+                    return out
+            if path.endswith("experts"):
+                # stacked expert weights [E, d_in, d_out] -> batched QW
+                out = {}
+                for name, w in node.items():
+                    if w.ndim == 3 and w.shape[1] % kg == 0:
+                        out[name + "_qw"] = jax.vmap(
+                            lambda we: _quantize_2d(we, quant))(w)
+                    else:
+                        out[name] = w
+                return out
+            return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        return node
+
+    return walk(params, "")
+
+
+def quantized_bytes(params) -> int:
+    """Total HBM bytes of a (possibly quantized) param tree."""
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(params)
+               if hasattr(x, "size"))

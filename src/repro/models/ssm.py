@@ -1,0 +1,258 @@
+"""Mamba1 / Mamba2 selective-state-space blocks (falcon-mamba, zamba2).
+
+Training/prefill runs a *chunked* selective scan: an outer lax.scan over
+sequence chunks carries the SSM state, and within a chunk the recurrence is
+evaluated with jax.lax.associative_scan — no [B, S, d_inner, d_state] global
+materialization, memory is O(B · chunk · state) transient + one carry per
+chunk. Decode is the O(1)-state single-step update (this is why the SSM and
+hybrid archs are the ones that run the long_500k shape).
+
+The paper's technique applies to the dense projections (in/out/x/dt): they
+all go through LutDense. The scan itself is activation×activation (no static
+low-bit operand) — out of mpGEMM scope, see DESIGN.md §5.
+
+Mamba1 uses the lazy chunked scan; mamba2 uses the SSD duality (§Perf C2):
+intra-chunk recurrence as masked [c, c] score matmuls on the MXU, so the
+[c, hd, d_state] state tensor never materializes. Simplifications vs
+reference mamba (documented in DESIGN.md): conv on the x-path only,
+ngroups=1.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv (shared by mamba1/2)
+# ---------------------------------------------------------------------------
+
+def _causal_dwconv(x, conv_w, conv_b, conv_state=None):
+    """x [B,S,C], conv_w [W,C] depthwise causal; returns (y, new_state)."""
+    b, s, c = x.shape
+    w = conv_w.shape[0]
+    if conv_state is None:
+        left = jnp.zeros((b, w - 1, c), x.dtype)
+    else:
+        left = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([left, x], axis=1)  # [B, S+W-1, C]
+    y = jnp.zeros((b, s, c), jnp.float32)
+    for i in range(w):  # W is tiny (4): unrolled taps beat a conv call
+        y = y + xp[:, i:i + s, :].astype(jnp.float32) * conv_w[i].astype(jnp.float32)
+    y = y + conv_b.astype(jnp.float32)
+    new_state = (xp[:, -(w - 1):, :] if w > 1
+                 else jnp.zeros((b, 0, c), x.dtype))
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# chunked selective scan core
+# ---------------------------------------------------------------------------
+
+def _combine(a, b_):
+    return (a[0] * b_[0], a[1] * b_[0] + b_[1])
+
+
+def _lazy_chunk_scan(make_chunk, n_chunks: int, h0, out_dim: int, dtype):
+    """Chunked selective scan that NEVER materializes the full
+    [B, S, *state] decay/input/state tensors (§Perf C1).
+
+    ``make_chunk(ci) -> (decay, inp, project)`` builds the [B, c, *state]
+    chunk tensors lazily (sliced from the raw dt/x/B/C projections inside
+    the body) and ``project(h_states [B, c, *state]) -> y [B, c, out_dim]``
+    contracts the states with C in-body, so only chunk-transient state ever
+    exists; the scan carries h [B, *state] and emits y chunks.
+    """
+    def body(h, ci):
+        decay, inp, project = make_chunk(ci)
+        pd, pi = jax.lax.associative_scan(_combine, (decay, inp), axis=1)
+        hs = pd * h[:, None] + pi
+        return hs[:, -1], project(hs).astype(dtype)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    hS, ys = jax.lax.scan(body, h0, jnp.arange(n_chunks))
+    # ys: [n, B, c, out_dim] -> [B, S, out_dim]
+    ys = jnp.moveaxis(ys, 0, 1)
+    b = ys.shape[0]
+    return ys.reshape(b, -1, out_dim), hS
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg, dtype=jnp.float32) -> Params:
+    d, di, ds, dc = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    dt_rank = cfg.dt_rank
+    ks = jax.random.split(key, 5)
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": L.dense_init(ks[0], d, 2 * di, dtype=dtype),
+        "conv_w": jnp.zeros((dc, di), dtype) + 0.1,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": L.dense_init(ks[1], di, dt_rank + 2 * ds, dtype=dtype),
+        "dt_proj": L.dense_init(ks[2], dt_rank, di, bias=True, dtype=dtype),
+        "A_log": jnp.log(a).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": L.dense_init(ks[3], di, d, dtype=dtype),
+    }
+
+
+def mamba_apply(p: Params, x: jax.Array, cfg, *, cache=None, quant=None):
+    """x [B,S,D] -> (y [B,S,D], new_cache). cache={"conv","ssm"} for decode."""
+    b, s, d = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    tbl = L.make_table(x, quant)
+    xz = L.lut_dense(p["in_proj"], x, quant, tbl)
+    xp, z = jnp.split(xz, 2, axis=-1)
+    xp = shard(xp, "batch", "seq", "model")
+
+    conv_state = None if cache is None else cache["conv"]
+    xc, new_conv = _causal_dwconv(xp, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+
+    dbc = L.lut_dense(p["x_proj"], xc, quant)
+    dt, bmat, cmat = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(
+        L.lut_dense(p["dt_proj"], dt, quant).astype(jnp.float32))  # [B,S,di]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # [di, ds]
+    xf = xc.astype(jnp.float32)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+
+    h0 = (jnp.zeros((b, di, ds), jnp.float32) if cache is None
+          else cache["ssm"].astype(jnp.float32))
+    if s == 1:  # decode fast path, no chunking machinery
+        decay1 = jnp.exp(dt[:, 0, :, None] * a[None])
+        inp1 = (dt[:, 0] * xf[:, 0])[..., None] * bf[:, 0, None, :]
+        hS = decay1 * h0 + inp1
+        y = jnp.einsum("bdz,bz->bd", hS, cf[:, 0])[:, None]
+    else:
+        c = min(cfg.ssm_chunk, s)
+        pad = (-s) % c
+        if pad:  # zero-pad: decay=exp(0)=... dt=0 => decay=1, inp=0 (no-op)
+            dt, xf2, bf, cf = (jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+                               for t in (dt, xf, bf, cf))
+        else:
+            xf2 = xf
+
+        def make_chunk(ci):
+            sl = lambda t: jax.lax.dynamic_slice_in_dim(t, ci * c, c, axis=1)
+            dt_c, x_c, b_c, c_c = sl(dt), sl(xf2), sl(bf), sl(cf)
+            decay = jnp.exp(dt_c[..., None] * a[None, None])   # [B,c,di,ds]
+            inp = (dt_c * x_c)[..., None] * b_c[:, :, None, :]
+            proj = lambda hs: jnp.einsum("bcdz,bcz->bcd", hs, c_c)
+            return decay, inp, proj
+
+        y, hS = _lazy_chunk_scan(make_chunk, (s + pad) // c, h0, di,
+                                 jnp.float32)
+        y = y[:, :s]
+    y = y + p["D"].astype(jnp.float32) * xf
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.lut_dense(p["out_proj"], y.astype(x.dtype), quant)
+    new_cache = None if cache is None else {"conv": new_conv.astype(cache["conv"].dtype),
+                                            "ssm": hS}
+    return shard(y, "batch", "seq", None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (zamba2)
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key, cfg, dtype=jnp.float32) -> Params:
+    d, di, ds, dc = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    nh = cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": L.dense_init(ks[0], d, 2 * di + 2 * ds + nh, dtype=dtype),
+        "conv_w": jnp.zeros((dc, di), dtype) + 0.1,
+        "conv_b": jnp.zeros((di,), dtype),
+        "A_log": jnp.zeros((nh,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "D": jnp.ones((nh,), dtype),
+        "norm_g": jnp.ones((di,), dtype),
+        "out_proj": L.dense_init(ks[1], di, d, dtype=dtype),
+    }
+
+
+def mamba2_apply(p: Params, x: jax.Array, cfg, *, cache=None, quant=None):
+    b, s, d = x.shape
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = di // nh
+    tbl = L.make_table(x, quant)
+    proj = L.lut_dense(p["in_proj"], x, quant, tbl)
+    xp, z, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + ds, 2 * di + 2 * ds], axis=-1)
+    xp = shard(xp, "batch", "seq", "model")
+
+    conv_state = None if cache is None else cache["conv"]
+    xc, new_conv = _causal_dwconv(xp, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # [B,S,nh]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # [nh]
+    xh = xc.reshape(b, s, nh, hd)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+
+    h0 = (jnp.zeros((b, nh, hd, ds), jnp.float32) if cache is None
+          else cache["ssm"].astype(jnp.float32))
+    if s == 1:
+        decay1 = jnp.exp(dt[:, 0] * a)[:, :, None, None]
+        inp1 = (dt[:, 0, :, None] * xh[:, 0])[..., None] * bf[:, 0, None, None, :]
+        hS = decay1 * h0 + inp1
+        y = jnp.einsum("bhpz,bz->bhp", hS, cf[:, 0])[:, None]
+    else:
+        # SSD duality (§Perf C2): within a chunk the scalar-per-head decay
+        # lets the recurrence collapse into attention-like matmuls —
+        # scores[t,s] = (C_t·B_s)·exp(cum_t − cum_s) on the MXU; the
+        # [c, hd, ds] state tensor is never materialized (only the
+        # chunk-boundary carry is). exp arguments are ≤ 0 (a < 0): stable.
+        c = min(cfg.ssm_chunk, s)
+        pad = (-s) % c
+        xh2, dt2, bf2, cf2 = xh, dt, bf, cf
+        if pad:
+            dt2 = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            xh2 = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            bf2 = jnp.pad(bf, ((0, 0), (0, pad), (0, 0)))
+            cf2 = jnp.pad(cf, ((0, 0), (0, pad), (0, 0)))
+        tri = jnp.tril(jnp.ones((c, c), bool))
+
+        def body(h, ci):
+            sl = lambda t: jax.lax.dynamic_slice_in_dim(t, ci * c, c, axis=1)
+            dt_c, x_c, b_c, c_c = sl(dt2), sl(xh2), sl(bf2), sl(cf2)
+            la = dt_c * a                      # [B,c,nh], <= 0
+            cum = jnp.cumsum(la, axis=1)
+            cb = jnp.einsum("btz,bsz->bts", c_c, b_c)
+            w = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # [B,t,s,nh]
+            w = jnp.where(tri[None, :, :, None], w, 0.0)
+            dtx = dt_c[..., None] * x_c        # [B,s,nh,hd]
+            y_c = jnp.einsum("bts,btsh,bshp->bthp", cb, w, dtx)
+            y_c += jnp.einsum("btz,bhpz,bth->bthp", c_c, h, jnp.exp(cum))
+            wend = jnp.exp(cum[:, -1:, :] - cum)
+            h_new = (jnp.exp(cum[:, -1])[:, :, None, None] * h
+                     + jnp.einsum("bshp,bsz,bsh->bhpz", dtx, b_c, wend))
+            return h_new, y_c
+
+        body = jax.checkpoint(body, prevent_cse=False)
+        hS, ys = jax.lax.scan(body, h0, jnp.arange((s + pad) // c))
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, s + pad, nh, hd)[:, :s]
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(b, s, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))  # gated
+    # grouped RMSNorm before out-proj (mamba2 style)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_g"].astype(jnp.float32)
+    y = L.lut_dense(p["out_proj"], y.astype(x.dtype), quant)
+    new_cache = None if cache is None else {"conv": new_conv.astype(cache["conv"].dtype),
+                                            "ssm": hS}
+    return shard(y, "batch", "seq", None), new_cache

@@ -1,0 +1,142 @@
+"""Llama-3.2-Vision-style VLM backbone: self-attn decoder with gated
+cross-attention layers every ``xattn_every`` layers.
+
+The vision frontend is a STUB per the assignment: ``batch["image_embeds"]``
+supplies precomputed patch embeddings [B, n_img, d_model] (input_specs()
+provides the ShapeDtypeStruct).  Cross-attn KV is computed once per image
+and cached for decode (stacked [n_xlayers, ...]).
+
+Structure: n_groups groups of (xattn_every-1 self layers + 1 cross layer).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain_tree, shard
+from repro.models import kvcache, layers as L
+from repro.models import transformer as TR
+
+Params = Dict[str, Any]
+
+
+def _xattn_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": L.norm_init(cfg.d_model, dtype),
+        "xattn": L.attention_init(k1, cfg, cross=True, dtype=dtype),
+        "gate_attn": jnp.zeros((), dtype),
+        "mlp_norm": L.norm_init(cfg.d_model, dtype),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype=dtype),
+        "gate_mlp": jnp.zeros((), dtype),
+    }
+
+
+def init(key, cfg, dtype=None) -> Params:
+    dtype = dtype or cfg.param_dtype
+    k_e, k_s, k_x, k_h = jax.random.split(key, 4)
+    n_groups = cfg.n_layers // cfg.xattn_every
+    n_self = cfg.xattn_every - 1
+    skeys = jax.random.split(k_s, n_groups * n_self).reshape(n_groups, n_self)
+    xkeys = jax.random.split(k_x, n_groups)
+    return {
+        "embed": TR.embed_init(k_e, cfg.vocab_size, cfg.d_model, dtype),
+        "self_groups": jax.vmap(jax.vmap(
+            lambda k: TR.block_init(k, cfg, dtype)))(skeys),
+        "xattn_layers": jax.vmap(
+            lambda k: _xattn_layer_init(k, cfg, dtype))(xkeys),
+        "final_norm": L.norm_init(cfg.d_model, dtype),
+        "lm_head": L.dense_init(k_h, cfg.d_model, cfg.vocab_size, dtype=dtype),
+    }
+
+
+def _xattn_apply(p, h, cfg, xkv, quant):
+    a, _ = L.attention_apply(
+        p["xattn"], L.rms_norm(p["attn_norm"], h, cfg.norm_eps), cfg,
+        xattn_kv=xkv, causal=False, use_rope=False, quant=quant)
+    h = h + jnp.tanh(p["gate_attn"].astype(jnp.float32)).astype(h.dtype) * a
+    m = L.mlp_apply(p["mlp"], L.rms_norm(p["mlp_norm"], h, cfg.norm_eps), quant)
+    h = h + jnp.tanh(p["gate_mlp"].astype(jnp.float32)).astype(h.dtype) * m
+    return shard(h, "batch", "seq", None)
+
+
+def compute_image_kv(params: Params, image_embeds: jax.Array, cfg):
+    """Precompute per-cross-layer image KV [n_groups, B, n_img, KV, hd]."""
+    b, n_img, _ = image_embeds.shape
+
+    def one(xp):
+        k = L.lut_dense(xp["xattn"]["wk"], image_embeds, cfg.quant)
+        v = L.lut_dense(xp["xattn"]["wv"], image_embeds, cfg.quant)
+        return (k.reshape(b, n_img, cfg.n_kv_heads, cfg.head_dim),
+                v.reshape(b, n_img, cfg.n_kv_heads, cfg.head_dim))
+
+    return jax.lax.map(one, params["xattn_layers"])
+
+
+def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
+            window=None) -> Tuple[jax.Array, Any, Dict]:
+    tokens = batch["tokens"]
+    quant = cfg.quant
+    h = TR.embed_apply(params["embed"], tokens).astype(cfg.activation_dtype)
+
+    if "image_embeds" in batch:  # prefill/train: embed the image
+        image_kv = compute_image_kv(params, batch["image_embeds"]
+                                    .astype(cfg.activation_dtype), cfg)
+    else:  # decode: reuse the cached image KV
+        image_kv = caches["image_kv"]
+    self_caches = None if caches is None else caches["kv"]
+
+    def group_body(carry, xs):
+        hh = carry
+        if self_caches is None:
+            gp, xp, (ik, iv) = xs
+            gcache = None
+        else:
+            gp, xp, (ik, iv), gcache = xs
+
+        def inner(c, lxs):
+            lp = lxs if gcache is None else lxs[0]
+            lp = constrain_tree(lp)  # §Perf T1
+            lc = None if gcache is None else lxs[1]
+            return TR.block_apply(lp, c, cfg, cache=lc, cache_pos=cache_pos,
+                                  window=window, quant=quant)
+
+        inner = jax.checkpoint(inner, prevent_cse=False)
+        ixs = gp if gcache is None else (gp, gcache)
+        hh, new_c = jax.lax.scan(inner, hh, ixs)
+        hh = _xattn_apply(xp, hh, cfg, (ik.astype(hh.dtype), iv.astype(hh.dtype)),
+                          quant)
+        return hh, new_c
+
+    group_body = jax.checkpoint(group_body, prevent_cse=False)
+    xs = ((params["self_groups"], params["xattn_layers"], image_kv)
+          if self_caches is None
+          else (params["self_groups"], params["xattn_layers"], image_kv,
+                self_caches))
+    h, new_self = jax.lax.scan(group_body, h, xs)
+
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    logits = TR.head_apply(params["lm_head"], h, quant)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"kv": new_self, "image_kv": image_kv}
+    return logits, new_caches, {}
+
+
+def init_cache(cfg, batch: int, s_cache: int, window=None, dtype=jnp.bfloat16,
+               image_kv=None):
+    n_groups = cfg.n_layers // cfg.xattn_every
+    n_self = cfg.xattn_every - 1
+    k, v = kvcache.attn_cache(n_groups * n_self, batch, s_cache,
+                              cfg.n_kv_heads, cfg.head_dim, dtype, window)
+    shp = (n_groups, n_self) + k.shape[1:]
+    caches = {"kv": (k.reshape(shp), v.reshape(shp))}
+    if image_kv is None:
+        ikv = jnp.zeros((n_groups, batch, cfg.n_image_tokens,
+                         cfg.n_kv_heads, cfg.head_dim), dtype)
+        image_kv = (ikv, ikv)
+    caches["image_kv"] = image_kv
+    return caches

@@ -1,0 +1,157 @@
+"""Three-term roofline from a compiled XLA artifact.
+
+  compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory     = HLO_bytes / (chips × HBM_bw)
+  collective = Σ collective_bytes × ring_factor / link_bw   (per-chip HLO)
+
+``cost_analysis()`` supplies per-device FLOPs/bytes of the partitioned
+module; collective bytes are parsed from the *post-optimization* HLO text
+(``compiled.as_text()``) — the pre-partitioning stableHLO has no collectives
+yet. Shapes in HLO are per-device, so per-chip terms divide by link/HBM
+bandwidth directly (the global forms in the task spec cancel chips).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind result bytes of every collective in (per-device) HLO."""
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str = m.group(1) or m.group(2)
+        kind = m.group(3)
+        if m.group(0).find(f"{kind}-done(") >= 0:
+            continue  # avoid double counting async start/done pairs
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes: Dict[str, int]
+    n_devices: int
+    # terms in seconds
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    model_flops: float = 0.0        # 6·N·D (train) or 2·N·D (inference)
+    peak_flops: float = hw.PEAK_BF16_FLOPS
+    min_bytes: float = 0.0          # lower bound: args read + non-aliased out
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.n_devices
+        return (self.model_flops / total) if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Roofline proximity of the step.
+
+        The step's *ideal* time is whichever hardware limit binds its
+        irreducible work: useful-FLOPs time (compute roofline) or
+        minimum-traffic time (memory roofline — the binding one for decode,
+        where the step MUST stream params+cache once). Fraction =
+        max(ideal terms) / achieved bound time.
+        """
+        if self.t_bound <= 0:
+            return 0.0
+        t_ideal_c = self.model_flops / (self.n_devices * self.peak_flops)
+        t_ideal_m = self.min_bytes / hw.HBM_BW
+        return min(1.0, max(t_ideal_c, t_ideal_m) / self.t_bound)
+
+    @property
+    def memory_efficiency(self) -> float:
+        """min necessary HBM traffic / achieved traffic (1.0 = no waste)."""
+        return (self.min_bytes / self.bytes_per_device
+                if self.bytes_per_device else 0.0)
+
+    def to_dict(self):
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes": self.coll_bytes,
+            "n_devices": self.n_devices,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "min_bytes": self.min_bytes,
+            "memory_efficiency": self.memory_efficiency,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze(compiled, *, n_devices: int, model_flops: float = 0.0,
+            hlo_text: Optional[str] = None, int8_fraction: float = 0.0,
+            min_bytes: float = 0.0) -> Roofline:
+    """Build the roofline from a compiled executable.
+
+    int8_fraction: fraction of FLOPs running at the int8 MXU rate (the
+    LUT-as-int8-GEMM path) — raises the effective compute ceiling.
+    """
+    # Loop-aware costing (roofline/hlo_cost.py): XLA's flat cost_analysis
+    # counts while bodies once — wrong by the trip count for scanned layers,
+    # microbatches and flash chunks. Flat numbers kept for reference.
+    from repro.roofline import hlo_cost
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    lc = hlo_cost.analyze_text(text)
+    flops, bts, coll = lc.flops, lc.bytes, dict(lc.coll)
+
+    peak = (hw.PEAK_BF16_FLOPS * (1 - int8_fraction)
+            + hw.PEAK_INT8_OPS * int8_fraction)
+    t_comp = flops / peak
+    t_mem = bts / hw.HBM_BW
+    t_coll = sum(hw.RING_FACTOR.get(k, 1.0) * v for k, v in coll.items()) \
+        / hw.ICI_LINK_BW
+    return Roofline(flops, bts, coll, n_devices,
+                    t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+                    model_flops=model_flops, peak_flops=peak,
+                    min_bytes=min_bytes)

@@ -1,0 +1,17 @@
+"""TPU v5e hardware constants for the roofline model (per task spec)."""
+
+PEAK_BF16_FLOPS = 197e12      # FLOP/s per chip
+PEAK_INT8_OPS = 394e12        # OP/s per chip (2x bf16 on the MXU)
+HBM_BW = 819e9                # bytes/s per chip
+ICI_LINK_BW = 50e9            # bytes/s per link
+HBM_BYTES = 16 * 2 ** 30      # 16 GiB per chip
+VMEM_BYTES = 128 * 2 ** 20    # ~128 MiB per chip
+
+# effective per-link traffic multiplier by collective type (ring algorithms)
+RING_FACTOR = {
+    "all-reduce": 2.0,        # reduce-scatter + all-gather phases
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}

@@ -1,0 +1,146 @@
+"""Batched serving engine with continuous batching.
+
+The engine owns a fixed pool of ``max_batch`` decode slots backed by one
+static-shape KV cache (per-slot positions; finished slots are refilled from
+the request queue without touching in-flight ones — continuous batching).
+Weights are the packed low-bit serving format (``serve_quantized`` params):
+decode is exactly the mpGEMM regime the paper targets (memory-bound GEMV-ish
+ops where the 4-16x weight-traffic cut pays off).
+
+Two jitted programs:
+  * ``prefill(params, tokens, caches) -> (next_token, caches)``  per request
+    (left-padded to the slot's prompt bucket),
+  * ``decode(params, tokens, caches, pos) -> (next_token, caches)`` for the
+    whole pool, one token per slot per call.
+
+Per-slot positions: attention masks by each slot's own valid length, so one
+program serves ragged sequence lengths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ArchConfig
+from repro.models import api
+from repro.serving.sampler import sample
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # [len] int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    done: bool = False
+    output: Optional[List[int]] = None
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
+                 max_seq: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.key = jax.random.key(seed)
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int32)        # next write position
+        self.budget = np.zeros(max_batch, np.int32)     # remaining new tokens
+        self.last_tok = np.zeros(max_batch, np.int32)
+        self.caches = api.init_cache(cfg, max_batch, max_seq,
+                                     dtype=jnp.float32)
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl,
+                                static_argnames=("plen",))
+
+    # -- jitted programs ------------------------------------------------------
+    def _prefill_impl(self, params, caches, tokens, slot, plen):
+        """Prefill one slot with a prompt of (bucketed) length plen."""
+        b = self.max_batch
+        full = jnp.zeros((b, plen), jnp.int32).at[slot].set(tokens)
+        logits, new_caches, _ = api.forward(params, {"tokens": full}, self.cfg,
+                                            caches=caches, cache_pos=0)
+        # merge: only this slot's cache rows advance
+        def merge(old, new):
+            if old.ndim < 2 or old.shape[1] != b:
+                return new
+            sel = (jnp.arange(b) == slot)
+            bshape = (1, b) + (1,) * (old.ndim - 2)
+            return jnp.where(sel.reshape(bshape), new.astype(old.dtype), old)
+        merged = jax.tree.map(merge, caches, new_caches)
+        return logits[slot, -1], merged
+
+    def _decode_impl(self, params, caches, tokens, pos, key):
+        """One decode tick for the whole pool. tokens [B,1], pos [B] per-slot
+        positions (ragged continuous batching; attention masks per slot)."""
+        logits, new_caches, _ = api.forward(
+            params, {"tokens": tokens}, self.cfg, caches=caches,
+            cache_pos=pos)
+        nxt = sample(key, logits[:, -1], temperature=0.0)
+        return nxt, new_caches
+
+    # -- engine loop ------------------------------------------------------
+    def submit(self, req: Request):
+        req.output = []
+        self.queue.put(req)
+
+    def _admit(self):
+        for i in range(self.max_batch):
+            if self.slots[i] is None and not self.queue.empty():
+                req = self.queue.get()
+                plen = 1 << max(3, (len(req.prompt) - 1).bit_length())
+                plen = min(plen, self.max_seq)
+                toks = np.zeros(plen, np.int32)
+                toks[-len(req.prompt):] = req.prompt  # left-pad bucket
+                logits, self.caches = self._prefill(
+                    self.params, self.caches, jnp.asarray(toks), i, plen=plen)
+                self.slots[i] = req
+                self.pos[i] = plen
+                self.budget[i] = req.max_new_tokens
+                tok = int(np.argmax(np.asarray(logits)))
+                req.output.append(tok)
+                self.last_tok[i] = tok
+                self.budget[i] -= 1
+
+    def step(self):
+        """One continuous-batching tick: admit, decode, retire."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return False
+        self.key, sub = jax.random.split(self.key)
+        toks = jnp.asarray(self.last_tok[:, None])
+        nxt, self.caches = self._decode(self.params, self.caches, toks,
+                                        jnp.asarray(self.pos), sub)
+        nxt = np.asarray(nxt)
+        for i in active:
+            if self.pos[i] + 1 >= self.max_seq:
+                self.budget[i] = 0
+            else:
+                self.slots[i].output.append(int(nxt[i]))
+                self.last_tok[i] = nxt[i]
+                self.pos[i] += 1
+                self.budget[i] -= 1
+            if self.budget[i] <= 0:
+                self.slots[i].done = True
+                self.slots[i] = None  # retire -> slot refillable next tick
+        return True
+
+    def run_to_completion(self, max_ticks: int = 10000):
+        ticks = 0
+        while (any(s is not None for s in self.slots)
+               or not self.queue.empty()):
+            if not self.step():
+                break
+            ticks += 1
+            if ticks > max_ticks:
+                raise RuntimeError("serving did not converge")
+        return ticks

@@ -1,0 +1,25 @@
+"""Token samplers: greedy / temperature / top-k / top-p, jit-friendly."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(key, logits, *, temperature: float = 0.0, top_k: int = 0,
+           top_p: float = 1.0):
+    """logits [B, V] -> tokens [B]."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jax.lax.top_k(lf, top_k)[0][..., -1:]
+        lf = jnp.where(lf < kth, -jnp.inf, lf)
+    if top_p < 1.0:
+        sorted_lf = jnp.sort(lf, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_lf, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_lf, cutoff_idx, axis=-1)
+        lf = jnp.where(lf < cutoff, -jnp.inf, lf)
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)

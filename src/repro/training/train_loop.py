@@ -1,0 +1,153 @@
+"""Train-step factory: QAT forward (the paper's technique in training),
+microbatch gradient accumulation, int8 gradient compression hook, pjit
+shardings.
+
+``make_train_step(cfg, opt, ...)`` returns a pure
+``(state, batch) -> (state, metrics)`` suitable for jax.jit with the
+shardings produced by ``train_shardings``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchConfig
+from repro.distributed import compression
+from repro.distributed.sharding import AxisPlan, named_sharding_tree
+from repro.models import api
+from repro.models.transformer import lm_loss
+from repro.training.optimizer import Optimizer, global_norm
+
+TrainState = Dict[str, Any]  # {"params", "opt", "step"}
+
+
+def make_loss_fn(cfg: ArchConfig, lb_coef=0.01, z_coef=0.001):
+    def loss_fn(params, batch):
+        logits, _, aux = api.forward(params, batch, cfg)
+        loss = lm_loss(logits, batch["labels"])
+        metrics = {"lm_loss": loss}
+        if "lb_loss" in aux:
+            loss = loss + lb_coef * aux["lb_loss"] + z_coef * aux["router_z_loss"]
+            metrics.update(aux)
+        metrics["loss"] = loss
+        return loss, metrics
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt: Optimizer,
+    *,
+    microbatches: int = 1,
+    grad_compression: Optional[str] = None,  # None | "int8"
+    qat: bool = True,
+) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """Build the train step. QAT fake-quant is applied when the config has a
+    quant block (paper §5: the mpGEMM technique on the training forward)."""
+    if qat and cfg.quant:
+        cfg = cfg.with_quant(qat=True)
+    loss_fn = make_loss_fn(cfg)
+
+    def single(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def accumulate(params, batch):
+        if microbatches == 1:
+            return single(params, batch)
+        def resh(x):
+            b = x.shape[0]
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+        mb = jax.tree.map(resh, batch)
+
+        def body(carry, mbatch):
+            g_acc, m_acc = carry
+            g, m = single(params, mbatch)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            m_acc = jax.tree.map(jnp.add, m_acc, m)
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m0 = {"loss": 0.0, "lm_loss": 0.0}
+        g1, m1 = single(params, jax.tree.map(lambda x: x[0], mb))
+        m0 = jax.tree.map(lambda x: jnp.zeros_like(x), m1)
+        (g, m), _ = jax.lax.scan(body, (g0, m0),
+                                 jax.tree.map(lambda x: x[1:], mb))
+        g = jax.tree.map(jnp.add, g, g1)
+        m = jax.tree.map(jnp.add, m, m1)
+        inv = 1.0 / microbatches
+        return (jax.tree.map(lambda x: x * inv, g),
+                jax.tree.map(lambda x: x * inv, m))
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        params = state["params"]
+        grads, metrics = accumulate(params, batch)
+        if grad_compression == "int8":
+            # error-feedback residual lives in state["ef"]
+            grads, new_ef = compression.compress_decompress_tree(
+                grads, state.get("ef"))
+        else:
+            new_ef = state.get("ef")
+        new_params, new_opt = opt.update(grads, state["opt"], params)
+        metrics["grad_norm"] = global_norm(grads)
+        new_state = dict(state, params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        if new_ef is not None:
+            new_state["ef"] = new_ef
+        return new_state, metrics
+
+    return step
+
+
+def init_train_state(key, cfg: ArchConfig, opt: Optimizer,
+                     grad_compression: Optional[str] = None) -> TrainState:
+    params = api.init_params(key, cfg)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if grad_compression == "int8":
+        state["ef"] = compression.init_error_feedback(params)
+    return state
+
+
+def train_shardings(state: TrainState, plan: AxisPlan):
+    """NamedShardings for the train state: params by rule table; optimizer
+    state mirrors its param's sharding (factored vectors follow the rows)."""
+    p_sh = named_sharding_tree(state["params"], plan)
+
+    def mirror(path_sh, st):
+        # opt m/v (or int8 {"q","s"}) follow params where shapes match
+        return jax.tree.map(
+            lambda x: path_sh if getattr(x, "shape", None) == getattr(
+                path_sh, "shape", None) else None, st)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    repl = NamedSharding(plan.mesh, P())
+
+    def opt_sharding(params_sh, opt_state):
+        flat_p, tdef = jax.tree_util.tree_flatten(params_sh)
+
+        def leaf_sharding(sh, leaf):
+            if isinstance(leaf, dict):
+                return {k: repl for k in leaf}
+            return sh if leaf.ndim == len(sh.spec) else repl
+
+        out = {}
+        for key, sub in opt_state.items():
+            if key == "step":
+                out[key] = repl
+                continue
+            flat_s = tdef.flatten_up_to(sub)
+            out[key] = tdef.unflatten(
+                [leaf_sharding(s, l) for s, l in zip(flat_p, flat_s)])
+        return out
+
+    sh = {"params": p_sh, "opt": opt_sharding(p_sh, state["opt"]),
+          "step": repl}
+    if "ef" in state:
+        sh["ef"] = p_sh
+    return sh

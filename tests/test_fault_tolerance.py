@@ -1,0 +1,62 @@
+"""Fault-tolerance policy + elastic re-mesh tests."""
+
+import numpy as np
+
+from repro.distributed import elastic
+from repro.training.fault_tolerance import Action, FaultToleranceManager
+
+
+def test_heartbeat_failure_detection():
+    ft = FaultToleranceManager(4, heartbeat_timeout=10.0)
+    now = 1000.0
+    for i in range(4):
+        ft.heartbeat(i, now=now)
+    assert ft.decide(now=now + 5) == Action.CONTINUE
+    ft.heartbeat(0, now=now + 20)
+    ft.heartbeat(1, now=now + 20)
+    ft.heartbeat(2, now=now + 20)
+    # host 3 silent past the deadline
+    assert 3 in ft.dead_hosts(now=now + 20)
+    assert ft.decide(now=now + 20) == Action.ELASTIC_DOWNSIZE
+
+
+def test_spare_replacement_preferred():
+    ft = FaultToleranceManager(4, n_spares=1, heartbeat_timeout=10.0)
+    now = 0.0
+    for i in range(4):
+        ft.heartbeat(i, now=now)
+    ft.mark_failed(2)
+    assert ft.decide(now=now) == Action.REPLACE_WITH_SPARE
+    ft.mark_failed(1)  # second failure: no spares left
+    assert ft.decide(now=now) == Action.ELASTIC_DOWNSIZE
+
+
+def test_straggler_detection_patience():
+    ft = FaultToleranceManager(4, straggler_factor=1.5, patience=3)
+    for step in range(5):
+        for i in range(4):
+            ft.heartbeat(i, step_duration=10.0 if i == 2 else 1.0)
+        slow = ft.stragglers()
+    assert slow == [2]
+    assert ft.decide() == Action.RESUME_SAME_MESH  # no spares: reschedule
+
+
+def test_elastic_downsize_plan():
+    # 4x4 mesh (data, model): failing device 5 kills data-row 1
+    d = elastic.plan_downsize((4, 4), ("data", "model"), [5])
+    assert d.old_data == 4
+    assert d.dropped_rows == (1,)
+    assert d.new_data == 2  # 3 intact rows -> floor pow2 = 2
+    assert d.microbatch_scale == 2  # global batch preserved by 2x accumulation
+
+
+def test_elastic_downsize_multi_pod_axes():
+    # (pod, data, model) = (2, 4, 2): device index 9 = pod1,data0,model1
+    d = elastic.plan_downsize((2, 4, 2), ("pod", "data", "model"), [9])
+    assert d.dropped_rows == (0,)
+    assert d.new_data == 2
+
+
+def test_elastic_no_failures_is_identity():
+    d = elastic.plan_downsize((8, 2), ("data", "model"), [])
+    assert d.new_data == 8 and d.microbatch_scale == 1

@@ -1,0 +1,138 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles.
+
+Sweeps shapes, dtypes, bit-widths, k_group, and table-quant modes, asserting
+allclose against ref.py. These are the kernel contracts for real TPU runs.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as Q
+from repro.core import table as T
+from repro.kernels import ops, ref
+
+
+def _mk(m, k, n, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    return a, w
+
+
+# ---------------------------------------------------------------------------
+# table_precompute kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k_group", [2, 4])
+@pytest.mark.parametrize("tq", [None, "per_row", "per_group"])
+@pytest.mark.parametrize("m,k", [(8, 64), (33, 128)])
+def test_table_precompute_matches_oracle(k_group, tq, m, k):
+    a, _ = _mk(m, k, 1)
+    got = ops.table_precompute(a, k_group, tq, block_m=8, block_g=8,
+                               interpret=True)
+    want = ref.ref_table_precompute(a, k_group, tq)
+    np.testing.assert_allclose(np.asarray(T.dequantize_table(got)),
+                               np.asarray(T.dequantize_table(want)),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got.rowsum), np.asarray(want.rowsum),
+                               rtol=1e-5, atol=1e-5)
+    if tq is not None:
+        # int8 codes must match the oracle exactly (shared closed-form scale)
+        np.testing.assert_array_equal(np.asarray(got.values),
+                                      np.asarray(want.values))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_table_precompute_dtypes(dtype):
+    a, _ = _mk(16, 64, 1, dtype=dtype)
+    got = ops.table_precompute(a, 4, "per_row", block_m=8, block_g=4,
+                               interpret=True)
+    want = ref.ref_table_precompute(a, 4, "per_row")
+    np.testing.assert_allclose(np.asarray(T.dequantize_table(got)),
+                               np.asarray(T.dequantize_table(want)),
+                               rtol=1e-2, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# lut_mpgemm kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme,bits", [("symmetric", 1), ("symmetric", 2),
+                                         ("symmetric", 4), ("asymmetric", 2),
+                                         ("ternary", 2)])
+@pytest.mark.parametrize("k_group", [2, 4])
+def test_lut_kernel_schemes(scheme, bits, k_group):
+    a, w = _mk(16, 128, 384)
+    qw = Q.quantize(w, bits, k_group=k_group, scheme=scheme)
+    want = ref.ref_lut_mpgemm_matmul(a, qw, table_quant=None)
+    got = ops.lut_mpgemm(a, qw, table_quant=None, block_m=8, block_n=128,
+                         block_g=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("tq", ["per_row", "per_group"])
+def test_lut_kernel_table_quant(tq):
+    a, w = _mk(16, 128, 256, seed=3)
+    qw = Q.quantize(w, 2, k_group=4, scheme="symmetric")
+    want = ref.ref_lut_mpgemm_matmul(a, qw, table_quant=tq)
+    got = ops.lut_mpgemm(a, qw, table_quant=tq, block_m=8, block_n=128,
+                         block_g=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 64, 128), (40, 256, 128), (8, 512, 640)])
+def test_lut_kernel_shape_sweep(m, k, n):
+    a, w = _mk(m, k, n, seed=m + k + n)
+    qw = Q.quantize(w, 2, k_group=4, scheme="symmetric")
+    want = ref.ref_lut_mpgemm_matmul(a, qw, table_quant="per_row")
+    got = ops.lut_mpgemm(a, qw, table_quant="per_row", block_m=8,
+                         block_n=128, block_g=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_lut_kernel_fused_precomputed_table():
+    """DFG split: caller precomputes the table once, shares it."""
+    a, w = _mk(16, 128, 256, seed=9)
+    qw1 = Q.quantize(w, 2, k_group=4, scheme="symmetric")
+    qw2 = Q.quantize(w * 0.5 + 0.1, 2, k_group=4, scheme="symmetric")
+    t = ops.table_precompute(a, 4, "per_row", block_m=8, block_g=8,
+                             interpret=True)
+    for qw in (qw1, qw2):
+        want = ref.ref_lut_mpgemm_matmul(a, qw, table=t)
+        got = ops.lut_mpgemm(a, qw, table=t, block_m=8, block_n=128,
+                             block_g=8, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dequant_mpgemm kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme,bits", [("symmetric", 1), ("symmetric", 2),
+                                         ("symmetric", 4), ("asymmetric", 4),
+                                         ("ternary", 2)])
+def test_dequant_kernel(scheme, bits):
+    a, w = _mk(24, 128, 256, seed=7)
+    qw = Q.quantize(w, bits, k_group=4, scheme=scheme)
+    want = ref.ref_dequant_mpgemm(a, qw)
+    got = ops.dequant_mpgemm(a, qw, block_m=8, block_n=128, block_g=8,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("k_group", [1, 2, 4, 8])
+def test_dequant_kernel_k_groups(k_group):
+    a, w = _mk(8, 64, 128, seed=11)
+    qw = Q.quantize(w, 2, k_group=k_group, scheme="symmetric")
+    want = ref.ref_dequant_mpgemm(a, qw)
+    got = ops.dequant_mpgemm(a, qw, block_m=8, block_n=128, block_g=8,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

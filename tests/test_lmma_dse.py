@@ -1,0 +1,51 @@
+"""LMMA descriptor / tile scheduler / DSE cost-model tests (§3.2.2, §3.3)."""
+
+from repro.core import dse
+from repro.core.lmma import LMMADescriptor, schedule_tiles
+
+
+def test_lmma_name_format():
+    d = LMMADescriptor(m=2, n=64, k=4096, a_dtype="bf16", w_bits=2)
+    assert d.name().startswith("lmma.m2n64k4096.")
+
+
+def test_schedule_is_elongated_and_fits_vmem():
+    d = LMMADescriptor(m=4096, n=8192, k=8192, w_bits=2, k_group=4)
+    ts = schedule_tiles(d)
+    # elongated: table reuse pushes bn >> bm (paper §3.2.2)
+    assert ts.bn >= 2 * ts.bm, (ts.bm, ts.bn)
+    assert ts.vmem_bytes <= 64 * 1024 * 1024
+    # lane alignment
+    assert ts.bn % 128 == 0
+
+
+def test_schedule_small_problem_clamps():
+    d = LMMADescriptor(m=8, n=128, k=64, w_bits=1, k_group=2)
+    ts = schedule_tiles(d)
+    assert ts.bm >= 8 and ts.bn >= 128 and ts.bg >= 8
+
+
+def test_dse_paper_and_tpu_optima():
+    assert dse.best_k_mux(8, False) == 4   # paper Fig 11 INT
+    assert dse.best_k_mux(16, True) == 5   # paper Fig 11 FP
+    assert dse.best_k_mxu() <= 2           # TPU adaptation (DESIGN.md §2)
+
+
+def test_dse_symmetrization_improves_density():
+    # Eq. 4-5: halving the table should improve mux compute density
+    for k in (2, 3, 4, 5):
+        assert dse.mux_density(k, symmetrized=True) > \
+            dse.mux_density(k, symmetrized=False)
+
+
+def test_dse_fusion_improves_density():
+    # §3.1.1: removing per-unit precompute improves density
+    for k in (2, 4):
+        assert dse.mux_density(k, fused_precompute=True) > \
+            dse.mux_density(k, fused_precompute=False)
+
+
+def test_tile_traffic_eq7_eq8():
+    r = dse.tile_traffic(2, 64, 4, k_group=4, w_bits=2, lut_bits=8)
+    assert r["table"] == 2 * 1 * 8 * 1        # M·G·E·LUT_BIT/8 (Eq. 7)
+    assert r["weights"] == 64 * 1 * 4 * 2 / 8  # N·G·K·W_BIT/8 (Eq. 8)

@@ -1,0 +1,178 @@
+"""Training substrate tests: optimizers, checkpoint/restart, data pipeline,
+gradient compression, end-to-end loss decrease."""
+
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.distributed import compression
+from repro.training import checkpoint as C
+from repro.training import optimizer as O
+from repro.training.data import PackedCorpus, Prefetcher, SyntheticLM
+from repro.training.train_loop import init_train_state, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def _rosenbrockish(params):
+    x, y = params["x"], params["y"]
+    return jnp.sum((1 - x) ** 2) + 5 * jnp.sum((y - x ** 2) ** 2)
+
+
+@pytest.mark.parametrize("name", ["adamw", "adamw8bit", "adafactor", "momentum"])
+def test_optimizer_converges(name):
+    opt = O.make_optimizer(name, lr=3e-2 if name != "momentum" else 1e-3)
+    params = {"x": jnp.zeros((4,)), "y": jnp.zeros((4,))}
+    state = opt.init(params)
+    loss0 = float(_rosenbrockish(params))
+
+    @jax.jit
+    def step(params, state):
+        g = jax.grad(_rosenbrockish)(params)
+        return opt.update(g, state, params)
+
+    for _ in range(300):
+        params, state = step(params, state)
+    assert float(_rosenbrockish(params)) < 0.1 * loss0
+
+
+def test_adamw8bit_state_is_int8():
+    opt = O.make_optimizer("adamw8bit", lr=1e-3)
+    params = {"w": jnp.ones((64, 64))}  # 4096 >= block size
+    state = opt.init(params)
+    assert state["m"]["w"]["q"].dtype == jnp.int8
+    g = {"w": jnp.full((64, 64), 0.1)}
+    _, state = opt.update(g, state, params)
+    assert state["m"]["w"]["q"].dtype == jnp.int8
+
+
+def test_adafactor_state_is_factored():
+    opt = O.make_optimizer("adafactor", lr=1e-3)
+    params = {"w": jnp.ones((256, 512)), "b": jnp.ones((8,))}
+    state = opt.init(params)
+    assert state["v"]["w"]["vr"].shape == (256,)
+    assert state["v"]["w"]["vc"].shape == (512,)
+    assert state["v"]["b"]["v"].shape == (8,)  # small tensors unfactored
+
+
+def test_lr_schedule():
+    fn = O.lr_schedule(1.0, warmup=10, total=100)
+    assert float(fn(jnp.asarray(0))) == 0.0
+    assert abs(float(fn(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(fn(jnp.asarray(100))) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# checkpointing + restart
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+    C.save(str(tmp_path), 7, tree)
+    restored, step = C.restore(str(tmp_path), tree)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    rm = C.RestartManager(str(tmp_path), every=1, keep=2, async_write=False)
+    tree = {"x": jnp.zeros(3)}
+    for s in range(1, 5):
+        rm.maybe_save(s, {"x": jnp.full(3, float(s))})
+    assert C.list_steps(str(tmp_path)) == [3, 4]  # gc keeps last 2
+    restored, step = rm.restore_or_none(tree)
+    assert step == 4 and float(restored["x"][0]) == 4.0
+    # a stale .tmp dir must never be picked up
+    os.makedirs(tmp_path / "step_00000099.tmp")
+    assert C.latest_step(str(tmp_path)) == 4
+
+
+def test_restart_resumes_data_deterministically(tmp_path):
+    src = SyntheticLM(100, 2, 8, seed=3)
+    b5 = src.batch_at(5)
+    b5_again = SyntheticLM(100, 2, 8, seed=3).batch_at(5)
+    np.testing.assert_array_equal(b5["tokens"], b5_again["tokens"])
+
+
+def test_prefetcher_order():
+    src = SyntheticLM(100, 2, 8, seed=1)
+    pf = Prefetcher(src, start_step=0, depth=2)
+    got = [pf.next()["tokens"] for _ in range(3)]
+    pf.close()
+    for i, g in enumerate(got):
+        np.testing.assert_array_equal(g, src.batch_at(i)["tokens"])
+
+
+def test_packed_corpus(tmp_path):
+    toks = np.arange(1000, dtype=np.int32) % 50
+    path = str(tmp_path / "corpus.npy")
+    np.save(path, toks)
+    pc = PackedCorpus(path, batch=2, seq_len=16, seed=0)
+    b = pc.batch_at(0)
+    assert b["tokens"].shape == (2, 16)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_grad_compression_error_feedback():
+    """EF accumulates the quantization residual; sum(compressed)+EF == signal."""
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)),
+                          jnp.float32)}
+    ef = compression.init_error_feedback(g)
+    cg, ef2 = compression.compress_decompress_tree(g, ef)
+    # lossy but residual-tracked: compressed + residual == original
+    np.testing.assert_allclose(np.asarray(cg["w"]) + np.asarray(ef2["w"]),
+                               np.asarray(g["w"]), rtol=1e-5, atol=1e-6)
+    # int8 quantization error bounded by scale
+    assert float(jnp.max(jnp.abs(ef2["w"]))) < float(jnp.max(jnp.abs(g["w"]))) / 100
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: loss decreases with the QAT train step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "olmoe-1b-7b"])
+def test_train_loss_decreases(arch):
+    cfg = registry.get_reduced(arch).replace(activation_dtype=jnp.float32)
+    opt = O.make_optimizer("adamw", lr=3e-3)
+    step_fn = jax.jit(make_train_step(cfg, opt, qat=True), donate_argnums=(0,))
+    state = init_train_state(jax.random.key(0), cfg, opt)
+    data = SyntheticLM(cfg.vocab_size, 4, 32, seed=0)
+    losses = []
+    for s in range(30):
+        batch = jax.tree.map(jnp.asarray, data.batch_at(s))
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+
+
+def test_train_with_microbatches_matches_full_batch():
+    cfg = registry.get_reduced("tinyllama-1.1b").replace(
+        activation_dtype=jnp.float32)
+    opt = O.make_optimizer("momentum", lr=1e-2)
+    data = SyntheticLM(cfg.vocab_size, 4, 16, seed=0)
+    batch = jax.tree.map(jnp.asarray, data.batch_at(0))
+
+    s1 = init_train_state(jax.random.key(1), cfg, opt)
+    s2 = jax.tree.map(lambda x: x, s1)
+    f1 = jax.jit(make_train_step(cfg, opt, microbatches=1, qat=False))
+    f2 = jax.jit(make_train_step(cfg, opt, microbatches=2, qat=False))
+    s1, m1 = f1(s1, batch)
+    s2, m2 = f2(s2, batch)
+    # same averaged gradients => same params (fp tolerance)
+    p1 = jax.tree_util.tree_leaves(s1["params"])
+    p2 = jax.tree_util.tree_leaves(s2["params"])
+    for a, b in zip(p1, p2):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-3, atol=2e-5)
