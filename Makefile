@@ -1,0 +1,21 @@
+# Single documented entry points for install / verify / benchmarks.
+# ROADMAP.md's tier-1 command is `make test`.
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: install test test-fast bench-smoke
+
+install:
+	$(PYTHON) -m pip install -r requirements.txt
+
+test:            ## tier-1 verify: the full suite, fail-fast
+	$(PYTHON) -m pytest -x -q
+
+test-fast:       ## kernel + core contracts only (minutes, not tens of)
+	$(PYTHON) -m pytest -x -q tests/test_kernels.py tests/test_fused_mpgemm.py \
+	    tests/test_lmma_dse.py tests/test_core_properties.py
+
+bench-smoke:     ## quick analytic benchmark pass (no kernels executed)
+	$(PYTHON) benchmarks/bench_fused_mpgemm.py --smoke
+	$(PYTHON) benchmarks/roofline_table.py 2>/dev/null || true

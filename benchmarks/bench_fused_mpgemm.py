@@ -1,0 +1,198 @@
+"""Fused vs. staged vs. dequant mpGEMM: HBM traffic model + roofline + timing.
+
+The fused kernel's whole value proposition (§3.1.1) is a traffic trade:
+
+  * staged  — ``table_precompute_pallas`` writes the [M, G·E] table to HBM,
+              ``lut_mpgemm_pallas`` reads it back once per N-tile pass
+              (grid (i,j,k): the (i,k) table block is re-fetched for every j);
+  * fused   — the table is rebuilt on the MXU in-VMEM from the activation
+              block; activations are re-read once per N-tile pass instead,
+              which is E/k_group-times (f32: 2·E/k_group-times) fewer bytes;
+              **table HBM bytes ≡ 0**;
+  * dequant — the stock-hardware baseline: same packed-weight traffic, dense
+              bf16 MXU after in-core upcast, no table at all.
+
+Run over the config registry's model projection shapes::
+
+    PYTHONPATH=src python benchmarks/bench_fused_mpgemm.py            # analytic
+    PYTHONPATH=src python benchmarks/bench_fused_mpgemm.py --run      # + timing
+    PYTHONPATH=src python benchmarks/bench_fused_mpgemm.py --smoke    # CI quick
+
+The analytic section is exact arithmetic on the kernels' actual BlockSpecs
+(via ops.pick_blocks), so the reported bytes are what the grids really move;
+``--run`` adds interpret-mode wall-clock parity/latency on a tiny shape.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core import quantize as Q
+from repro.core.lmma import LMMADescriptor, select_fusion
+from repro.kernels import ops
+from repro.roofline import hw
+
+KG = 4
+BITS = 2
+TABLE_BYTES_PER_ENTRY = 1  # int8 table (per_row quantization, §3.1.3)
+ACT_BYTES = 4              # f32 activations on the CPU/test path
+
+
+def _arch_shapes(arch_id, batches=(1, 256)):
+    """(name, M, N, K) projection shapes for one registry arch."""
+    cfg = registry.get_config(arch_id)
+    d_ff = cfg.d_ff or cfg.dense_d_ff or cfg.d_inner or 2 * cfg.d_model
+    for m in batches:
+        yield (f"{arch_id}_up_M{m}", m, d_ff, cfg.d_model)
+        yield (f"{arch_id}_down_M{m}", m, cfg.d_model, d_ff)
+
+
+def traffic_model(m, n, k, *, kg=KG, bits=BITS,
+                  table_entry_bytes=TABLE_BYTES_PER_ENTRY):
+    """Per-call HBM bytes for each pipeline, from the kernels' real grids.
+
+    Grid is (M/bm, N/bn, G/bg) with K innermost: an input block indexed
+    (i, k) is fetched N/bn times, one indexed (j, k) is fetched M/bm times.
+    Returns dict of dicts with per-stream bytes; the acceptance invariant is
+    ``fused["table"] == 0``.
+    """
+    g = k // kg
+    e = 1 << (kg - 1)
+    bm, bn, bg = ops.pick_blocks(m, n, g, kg, bits)
+    bm, bn, bg = min(bm, max(8, m)), min(bn, n), min(bg, g)
+    n_tiles = -(-n // bn)
+    m_tiles = -(-m // bm)
+    a_bytes = m * k * ACT_BYTES
+    table_bytes = m * g * e * table_entry_bytes
+    packed_bytes = n * g * bits * kg // 8
+    out_bytes = m * n * 4
+
+    staged = {
+        "act": a_bytes,                              # precompute reads A once
+        "table": table_bytes * (1 + n_tiles),        # write + per-N-tile read
+        "weights": packed_bytes * m_tiles,
+        "out": out_bytes,
+    }
+    fused = {
+        "act": a_bytes * n_tiles,                    # A re-read per N-tile
+        "table": 0,                                  # never leaves VMEM
+        "weights": packed_bytes * m_tiles,
+        "out": out_bytes,
+    }
+    dequant = {
+        "act": a_bytes * n_tiles,
+        "table": 0,
+        "weights": packed_bytes * m_tiles,
+        "out": out_bytes,
+    }
+    for d in (staged, fused, dequant):
+        d["total"] = d["act"] + d["table"] + d["weights"] + d["out"]
+    return {"staged": staged, "fused": fused, "dequant": dequant,
+            "blocks": (bm, bn, bg)}
+
+
+def roofline_us(m, n, k, pipeline, *, kg=KG, bits=BITS):
+    """max(compute, memory) latency projection on v5e, µs."""
+    g = k // kg
+    e = 1 << (kg - 1)
+    tr = traffic_model(m, n, k, kg=kg, bits=bits)
+    n_tiles = -(-n // tr["blocks"][1])
+    lookup_ops = 2 * m * n * g * e                      # T @ CW
+    precompute_ops = 2 * m * g * e * kg                 # A-block × sign basis
+    if pipeline == "staged":
+        t_c = (lookup_ops / hw.PEAK_INT8_OPS
+               + precompute_ops / hw.PEAK_BF16_FLOPS)
+    elif pipeline == "fused":                           # recompute per N-tile
+        t_c = (lookup_ops / hw.PEAK_INT8_OPS
+               + n_tiles * precompute_ops / hw.PEAK_BF16_FLOPS)
+    else:                                               # dequant: bf16 dense
+        t_c = 2 * m * n * k / hw.PEAK_BF16_FLOPS
+    t_m = tr[pipeline]["total"] / hw.HBM_BW
+    return max(t_c, t_m) * 1e6
+
+
+def _fmt_bytes(b):
+    return f"{b / 2**20:8.2f} MiB" if b else "   0       "
+
+
+def run_analytic(archs, table_entry_bytes=TABLE_BYTES_PER_ENTRY):
+    hdr = (f"{'shape':34s} {'blocks':>14s} {'pipe':>8s} {'table-HBM':>12s} "
+           f"{'total-HBM':>12s} {'roofline':>10s}  fusion")
+    print(hdr)
+    print("-" * len(hdr))
+    for arch in archs:
+        for name, m, n, k in _arch_shapes(arch):
+            tr = traffic_model(m, n, k, table_entry_bytes=table_entry_bytes)
+            desc = LMMADescriptor(m=m, n=n, k=k, w_bits=BITS, k_group=KG)
+            fusion = select_fusion(desc)
+            for pipe in ("staged", "fused", "dequant"):
+                us = roofline_us(m, n, k, pipe)
+                tag = f"auto→{fusion}" if pipe == "fused" else ""
+                print(f"{name:34s} {str(tr['blocks']):>14s} {pipe:>8s} "
+                      f"{_fmt_bytes(tr[pipe]['table'])} "
+                      f"{_fmt_bytes(tr[pipe]['total'])} {us:9.1f}µs  {tag}")
+            assert tr["fused"]["table"] == 0, "fused table traffic must be 0"
+        print()
+
+
+def run_timed(m=16, n=256, k=128):
+    """Interpret-mode wall clock (CPU): parity + relative cost only."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    qw = Q.quantize(w, BITS, k_group=KG)
+    runs = {
+        "fused": lambda: ops.fused_lut_mpgemm(
+            a, qw, table_quant="per_row", block_m=8, block_n=128, block_g=8,
+            interpret=True),
+        "staged": lambda: ops.lut_mpgemm(
+            a, qw, table_quant="per_row", fusion="staged", block_m=8,
+            block_n=128, block_g=8, interpret=True),
+        "dequant": lambda: ops.dequant_mpgemm(
+            a, qw, block_m=8, block_n=128, block_g=8, interpret=True),
+    }
+    outs = {}
+    for name, fn in runs.items():
+        fn()  # warm
+        t0 = time.perf_counter()
+        outs[name] = jax.block_until_ready(fn())
+        dt = (time.perf_counter() - t0) * 1e3
+        print(f"{name:>8s}: {dt:8.1f} ms/call (interpret mode, "
+              f"M={m} N={n} K={k})")
+    err = float(jnp.max(jnp.abs(outs["fused"] - outs["staged"])))
+    print(f"max |fused - staged| = {err:.3e}")
+    assert err == 0.0, "per_row fused path must be bit-exact with staged"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="*", default=None,
+                    help="registry arch ids (default: a representative trio)")
+    ap.add_argument("--float-table", action="store_true",
+                    help="model f32 tables (table_quant=None) instead of "
+                         "int8 — the staged pipeline's worst case")
+    ap.add_argument("--run", action="store_true",
+                    help="also time interpret-mode kernels on a tiny shape")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one arch, analytic only (CI)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        archs = ["tinyllama-1.1b"]
+    elif args.archs:
+        archs = args.archs
+    else:
+        archs = ["tinyllama-1.1b", "paper-bitnet-3b", "qwen2-72b"]
+    run_analytic(archs, table_entry_bytes=4 if args.float_table else 1)
+    if args.run:
+        run_timed()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

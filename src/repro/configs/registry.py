@@ -74,7 +74,8 @@ class ArchConfig:
     attn_chunk: int = 1024
     # the paper's technique: quant config dict or None
     #   {"qat": bool, "weight_bits", "scheme", "mpgemm_mode", "table_quant",
-    #    "k_group"}
+    #    "k_group", "fusion"}  — fusion ∈ {"auto","fused","staged"} picks the
+    #   lut_pallas precompute placement (fused = table built in-VMEM, §3.1.1)
     quant: Optional[dict] = None
     notes: str = ""
     source: str = ""
@@ -189,14 +190,22 @@ _REGISTRY: Dict[str, str] = {
 ASSIGNED = [k for k in _REGISTRY if k != "paper-bitnet-3b"]
 
 
+def _module_for(arch_id: str):
+    try:
+        modname = _REGISTRY[arch_id]
+    except KeyError:
+        raise ValueError(
+            f"unknown arch {arch_id!r}; known: {', '.join(_REGISTRY)}"
+        ) from None
+    return importlib.import_module(modname)
+
+
 def get_config(arch_id: str) -> ArchConfig:
-    mod = importlib.import_module(_REGISTRY[arch_id])
-    return mod.CONFIG
+    return _module_for(arch_id).CONFIG
 
 
 def get_reduced(arch_id: str) -> ArchConfig:
-    mod = importlib.import_module(_REGISTRY[arch_id])
-    return mod.reduced()
+    return _module_for(arch_id).reduced()
 
 
 def list_archs() -> List[str]:

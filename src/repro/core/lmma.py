@@ -17,7 +17,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
-__all__ = ["LMMADescriptor", "TileSchedule", "schedule_tiles", "lmma_name"]
+__all__ = ["LMMADescriptor", "TileSchedule", "schedule_tiles", "lmma_name",
+           "fused_tile_bytes", "select_fusion"]
 
 VMEM_BYTES = 64 * 1024 * 1024  # v5e VMEM ~128MB/2 cores -> 64MB usable/core
 LANE = 128
@@ -101,6 +102,45 @@ def schedule_tiles(desc: LMMADescriptor,
         t, w, a = _tile_bytes(8, LANE, 8, desc)
         best = TileSchedule(8, LANE, 8, t, w, a, 2 * (t + w) + a)
     return best
+
+
+def fused_tile_bytes(bm: int, bn: int, bg: int, desc: LMMADescriptor) -> int:
+    """Per-grid-step VMEM working set of the fused precompute→lookup kernel.
+
+    Unlike the staged kernel (whose A-side input is the HBM-resident table
+    block), the fused kernel streams the raw activation block and rebuilds
+    the table in-VMEM, so its working set carries BOTH the activation block
+    and the recomputed [bm, bg·E] table block (f32 entries plus the int8
+    quantized copy), alongside the usual packed-weight / CW / accumulator
+    terms.
+    """
+    e = 1 << (desc.k_group - 1)
+    planes = desc.w_bits if desc.w_bits > 0 else 2
+    a_blk = bm * bg * desc.k_group * _DTYPE_BYTES[desc.a_dtype]
+    ent_f32 = bm * bg * e * 4                       # basis-contraction result
+    tbl_q = bm * bg * e * (desc.table_bits // 8 or 1)
+    weights = bn * bg * planes * desc.k_group // 8
+    cw = bn * bg * e
+    acc = bm * bn * _DTYPE_BYTES[desc.acc_dtype]
+    return 2 * (a_blk + weights) + ent_f32 + tbl_q + cw + acc
+
+
+def select_fusion(desc: LMMADescriptor,
+                  ts: Optional[TileSchedule] = None,
+                  vmem_budget: int = VMEM_BYTES) -> str:
+    """§3.1.1 fusion decision: 'fused' iff the table block fits VMEM.
+
+    The fused kernel never writes the [M, G·E] table to HBM, but pays an
+    in-VMEM recompute per (N-tile, K-block) step; it is profitable exactly
+    when its enlarged working set still fits the VMEM budget — which it does
+    for every tile the memory-size scheduler emits, EXCEPT when callers pin
+    oversized (bm, bg) by hand. Returns "fused" or "staged".
+    """
+    if ts is None:
+        ts = schedule_tiles(desc)
+    return ("fused"
+            if fused_tile_bytes(ts.bm, ts.bn, ts.bg, desc) <= vmem_budget
+            else "staged")
 
 
 def _score(ts: TileSchedule, desc: LMMADescriptor, elongate: bool) -> float:

@@ -8,7 +8,10 @@ low-bit weights.  Modes:
   * ``"lut_xla"``     — LUT-based: DFG-split table precompute + single
                         ``T @ CW`` GEMM (TPU-native lookup, DESIGN.md §2);
                         with ``table_quant='per_row'`` the GEMM runs int8.
-  * ``"lut_pallas"``  — the Pallas LUT Tensor Core kernel (kernels/).
+  * ``"lut_pallas"``  — the Pallas LUT Tensor Core kernel (kernels/); the
+                        ``fusion`` knob picks the fused single-kernel
+                        precompute→lookup pipeline (table stays in VMEM,
+                        §3.1.1) vs the staged two-kernel one.
   * ``"fp16"``        — dense float GEMM on dequantized weights cached as a
                         regular array; reference/upper-precision path.
 
@@ -31,9 +34,12 @@ import jax.numpy as jnp
 from .quantize import QuantizedWeight, dequantize
 from .table import Table, precompute_table
 
-__all__ = ["mpgemm", "precompute_tables", "MPGEMM_MODES"]
+__all__ = ["mpgemm", "precompute_tables", "MPGEMM_MODES", "FUSION_MODES"]
 
 MPGEMM_MODES = ("fp16", "dequant", "lut_xla", "lut_pallas")
+# lut_pallas precompute placement (owned here, next to the mode it modifies,
+# so config/model validation never has to import the kernel stack)
+FUSION_MODES = ("auto", "fused", "staged")
 
 
 def precompute_tables(x, k_group: int = 4, table_quant: Optional[str] = "per_row") -> Table:
@@ -50,11 +56,12 @@ def _lut_xla(x2d, qw: QuantizedWeight, table_quant, table: Optional[Table]):
     return ref.ref_lut_mpgemm_matmul(x2d, qw, table_quant=table_quant, table=table)
 
 
-def _lut_pallas(x2d, qw: QuantizedWeight, table_quant, table: Optional[Table], interpret):
+def _lut_pallas(x2d, qw: QuantizedWeight, table_quant, table: Optional[Table],
+                fusion, interpret):
     from repro.kernels import ops
 
     return ops.lut_mpgemm(x2d, qw, table_quant=table_quant, table=table,
-                          interpret=interpret)
+                          fusion=fusion, interpret=interpret)
 
 
 def mpgemm(
@@ -64,10 +71,18 @@ def mpgemm(
     mode: str = "lut_xla",
     table_quant: Optional[str] = "per_row",
     table: Optional[Table] = None,
+    fusion: str = "auto",
     interpret: Optional[bool] = None,
     out_dtype=None,
 ) -> jax.Array:
-    """y[..., n] = Σ_k x[..., k] · W[n, k] with W stored low-bit packed."""
+    """y[..., n] = Σ_k x[..., k] · W[n, k] with W stored low-bit packed.
+
+    ``fusion`` (lut_pallas only) picks the precompute placement: "fused"
+    computes the table in-VMEM inside the mpGEMM kernel (never hits HBM),
+    "staged" materializes it between two kernels, "auto" lets the LMMA tile
+    scheduler decide from the VMEM budget. Ignored when ``table=`` is
+    supplied — a shared table is by definition staged.
+    """
     if mode not in MPGEMM_MODES:
         raise ValueError(f"mode {mode!r} not in {MPGEMM_MODES}")
     if x.shape[-1] != qw.k_total:
@@ -90,5 +105,5 @@ def mpgemm(
     else:  # lut_pallas
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
-        out = _lut_pallas(x2d, qw, table_quant, table, interpret)
+        out = _lut_pallas(x2d, qw, table_quant, table, fusion, interpret)
     return out.reshape(*lead, qw.n).astype(out_dtype)

@@ -14,15 +14,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import table as table_mod
-from repro.core.lmma import LMMADescriptor, schedule_tiles
+from repro.core.lmma import (LMMADescriptor, TileSchedule, schedule_tiles,
+                             select_fusion)
 from repro.core.quantize import QuantizedWeight
 from repro.core.table import Table
 from repro.kernels import ref
 from repro.kernels.dequant_mpgemm import dequant_mpgemm_pallas
+from repro.kernels.fused_lut_mpgemm import fused_lut_mpgemm_pallas
 from repro.kernels.lut_mpgemm import lut_mpgemm_pallas
 from repro.kernels.table_precompute import table_precompute_pallas
 
-__all__ = ["table_precompute", "lut_mpgemm", "dequant_mpgemm", "pick_blocks"]
+from repro.core.mpgemm import FUSION_MODES
+
+__all__ = ["table_precompute", "lut_mpgemm", "fused_lut_mpgemm",
+           "dequant_mpgemm", "pick_blocks", "auto_fusion", "FUSION_MODES"]
 
 
 def _pad_to(x, mult, axis):
@@ -47,6 +52,71 @@ def pick_blocks(m, n, g, k_group, planes, max_bm=256, max_bn=512, max_bg=512):
     return bm, bn, bg
 
 
+def _closed_form_row_scale(a: jax.Array, g: int, k_group: int) -> jax.Array:
+    """[M, 1] per-row INT8 table scale from A alone (table.group_absmax).
+
+    Shared by the staged precompute wrapper and the fused kernel wrapper so
+    both paths quantize with the bit-identical scale.
+    """
+    m = a.shape[0]
+    am = table_mod.group_absmax(a.astype(jnp.float32).reshape(m, g, k_group))
+    return (jnp.maximum(jnp.max(am, axis=-1), 1e-30) / 127.0)[:, None]
+
+
+def _clamp_blocks(m, n, g, k_group, planes, block_m, block_n, block_g):
+    """Block shapes clamped to the (padded) problem, byte-realigned.
+
+    Clamping bg to a small/odd g can undo the alignment pick_blocks
+    established, so the packed-stream byte alignment is re-applied after
+    every clamp. Shared by every mpGEMM wrapper.
+    """
+    if block_m is None or block_n is None or block_g is None:
+        bm, bn, bg = pick_blocks(m, n, g, k_group, planes)
+    else:
+        bm = bn = bg = None  # all supplied; skip the scheduler search
+    bm = block_m or min(bm, max(8, m))
+    bn = block_n or min(bn, n)
+    bg = block_g or min(bg, g)
+    while (bg * planes * k_group) % 8:
+        bg *= 2
+    return bm, bn, bg
+
+
+def auto_fusion(m, n, g, k_group, planes,
+                block_m=None, block_n=None, block_g=None) -> str:
+    """Resolve ``fusion="auto"`` for one mpGEMM shape: clamp blocks exactly
+    the way the wrappers do, then ask the LMMA scheduler whether the fused
+    working set fits VMEM. The single source of truth for the auto decision
+    — models.layers.resolve_fusion delegates here.
+    """
+    bm, bn, bg = _clamp_blocks(m, n, g, k_group, planes,
+                               block_m, block_n, block_g)
+    desc = LMMADescriptor(m=m, n=n, k=g * k_group, w_bits=planes,
+                          k_group=k_group)
+    return select_fusion(desc, TileSchedule(bm, bn, bg, 0, 0, 0, 0))
+
+
+def _padded_row_scale(a: jax.Array, g: int, k_group: int, bm: int):
+    rs = _pad_to(_closed_form_row_scale(a, g, k_group), bm, 0)
+    return jnp.where(rs == 0, 1.0, rs)  # padded rows get an inert scale
+
+
+def _pad_packed(qw: QuantizedWeight, gp: int, bn: int):
+    """Pad packed codes to gp K-groups / bn N-rows; pad wscale alongside.
+
+    NOTE: padded K-groups decode from zero bytes to sign=0, idx=0 fields, so
+    CW is nonzero at entry 0 — but the corresponding *table values* are 0
+    (A is zero-padded), so padded groups contribute 0 regardless of CW.
+    """
+    pkp = qw.packed
+    pb_full = gp * qw.num_planes * qw.k_group // 8
+    if pkp.shape[1] < pb_full:
+        pkp = jnp.pad(pkp, ((0, 0), (0, pb_full - pkp.shape[1])))
+    pkp = _pad_to(pkp, bn, 0)
+    wsp = _pad_to(qw.scale.astype(jnp.float32), bn, 0)
+    return pkp, wsp
+
+
 def table_precompute(a: jax.Array, k_group: int = 4,
                      table_quant: Optional[str] = "per_row",
                      *, block_m: int = 64, block_g: Optional[int] = None,
@@ -65,10 +135,7 @@ def table_precompute(a: jax.Array, k_group: int = 4,
     rowsum = jnp.sum(a.astype(jnp.float32), axis=-1)
     row_scale = None
     if table_quant == "per_row":
-        am = table_mod.group_absmax(a.astype(jnp.float32).reshape(m, g, k_group))
-        row_scale = (jnp.maximum(jnp.max(am, axis=-1), 1e-30) / 127.0)[:, None]
-        row_scale = _pad_to(row_scale, block_m, 0)
-        row_scale = jnp.where(row_scale == 0, 1.0, row_scale)
+        row_scale = _padded_row_scale(a, g, k_group, block_m)
     values, scale = table_precompute_pallas(
         ap, k_group, table_quant, row_scale,
         block_m=block_m, block_g=block_g, interpret=interpret)
@@ -81,20 +148,78 @@ def table_precompute(a: jax.Array, k_group: int = 4,
     return Table(values, scale[:m, :g].reshape(m, g, 1), rowsum, k_group)
 
 
+def fused_lut_mpgemm(x: jax.Array, qw: QuantizedWeight, *,
+                     table_quant: Optional[str] = "per_row",
+                     block_m: Optional[int] = None,
+                     block_n: Optional[int] = None,
+                     block_g: Optional[int] = None,
+                     interpret: bool = False) -> jax.Array:
+    """Single-kernel precompute→lookup mpGEMM: the table never leaves VMEM.
+
+    Streams activation blocks, rebuilds each [bm, bg·E] table block on the
+    MXU in-VMEM (quantizing in-register for per_row/per_group), and contracts
+    immediately against CW — the fused DFG of §3.1.1. Bit-exact with the
+    staged ``table_precompute`` + ``lut_mpgemm`` composition on the per_row
+    int8 path, float-tolerance-equal otherwise.
+    """
+    m = x.shape[0]
+    g = qw.g
+    planes = qw.num_planes
+    bm, bn, bg = _clamp_blocks(m, qw.n, g, qw.k_group, planes,
+                               block_m, block_n, block_g)
+
+    rowsum = jnp.sum(x.astype(jnp.float32), axis=-1)
+    row_scale = None
+    if table_quant == "per_row":
+        row_scale = _padded_row_scale(x, g, qw.k_group, bm)
+
+    # pad activations to (bm, bg·K) blocks; zero rows/groups produce zero
+    # table entries, so padded blocks contribute nothing to the output
+    xp = _pad_to(_pad_to(x, bm, 0), bg * qw.k_group, 1)
+    gp = xp.shape[1] // qw.k_group
+    pkp, wsp = _pad_packed(qw, gp, bn)
+
+    out = fused_lut_mpgemm_pallas(
+        xp, row_scale, pkp, wsp, k_group=qw.k_group,
+        table_quant=table_quant, planes=planes,
+        plane_scales=qw.plane_scales, n=pkp.shape[0],
+        block_m=bm, block_n=bn, block_g=bg, interpret=interpret)
+    out = out[:m, :qw.n]
+    return ref.zero_point_correction(out, qw, rowsum)
+
+
 def lut_mpgemm(x: jax.Array, qw: QuantizedWeight, *,
                table_quant: Optional[str] = "per_row",
                table: Optional[Table] = None,
+               fusion: str = "auto",
                block_m: Optional[int] = None, block_n: Optional[int] = None,
                block_g: Optional[int] = None,
                interpret: bool = False) -> jax.Array:
-    """LUT mpGEMM via the Pallas kernel (table fused or precomputed)."""
+    """LUT mpGEMM via the Pallas kernels.
+
+    ``fusion`` selects the pipeline: "fused" runs the single-kernel
+    precompute→lookup datapath (table stays in VMEM); "staged" runs
+    ``table_precompute_pallas`` then ``lut_mpgemm_pallas`` with the table
+    round-tripping through HBM; "auto" defers to the LMMA scheduler
+    (``core.lmma.select_fusion``), which picks fused whenever the fused
+    working set fits the VMEM budget. A caller-supplied ``table=`` (the
+    cross-consumer amortization of §3.1.1) always implies staged — the
+    table already exists.
+    """
+    if fusion not in FUSION_MODES:
+        raise ValueError(f"fusion {fusion!r} not in {FUSION_MODES}")
     m = x.shape[0]
     g, e = qw.g, 1 << (qw.k_group - 1)
     planes = qw.num_planes
-    bm, bn, bg = pick_blocks(m, qw.n, g, qw.k_group, planes)
-    bm = block_m or min(bm, max(8, m))
-    bn = block_n or min(bn, qw.n)
-    bg = block_g or min(bg, g)
+    bm, bn, bg = _clamp_blocks(m, qw.n, g, qw.k_group, planes,
+                               block_m, block_n, block_g)
+    if table is None and fusion != "staged":
+        if fusion == "auto":
+            fusion = auto_fusion(m, qw.n, g, qw.k_group, planes, bm, bn, bg)
+        if fusion == "fused":
+            return fused_lut_mpgemm(
+                x, qw, table_quant=table_quant, block_m=bm, block_n=bn,
+                block_g=bg, interpret=interpret)
     if table is None:
         table = table_precompute(x, qw.k_group, table_quant,
                                  block_m=min(64, bm), interpret=interpret)
@@ -111,16 +236,7 @@ def lut_mpgemm(x: jax.Array, qw: QuantizedWeight, *,
         if ts.shape[1] != 1:  # per_group
             tsp = _pad_to(tsp, bg, 1)
         tsp = jnp.where(tsp == 0, 1.0, tsp)
-    pkp = qw.packed
-    pb_full = gp * planes * qw.k_group // 8
-    if pkp.shape[1] < pb_full:
-        pkp = jnp.pad(pkp, ((0, 0), (0, pb_full - pkp.shape[1])))
-    # NOTE: padded K-groups contribute sign=+? fields decoded from zero bytes:
-    # field 0 -> sign 0, idx 0 -> CW += Σ_b ps_b * onehot(0) ≠ 0 at entry 0.
-    # But the padded *table values* are 0 (A padded with zeros), so padded
-    # groups contribute 0 regardless of CW. Padding along N handled below.
-    pkp = _pad_to(pkp, bn, 0)
-    wsp = _pad_to(qw.scale.astype(jnp.float32), bn, 0)
+    pkp, wsp = _pad_packed(qw, gp, bn)
     np_ = pkp.shape[0]
 
     out = lut_mpgemm_pallas(
@@ -137,20 +253,13 @@ def dequant_mpgemm(x: jax.Array, qw: QuantizedWeight, *,
     m = x.shape[0]
     g = qw.g
     planes = qw.num_planes
-    bm = min(block_m, max(8, m))
-    bn = min(block_n, qw.n)
-    bg = min(block_g, g)
-    while (bg * planes * qw.k_group) % 8:
-        bg *= 2
+    bm, bn, bg = _clamp_blocks(m, qw.n, g, qw.k_group, planes,
+                               min(block_m, max(8, m)), min(block_n, qw.n),
+                               min(block_g, g))
     xp = _pad_to(_pad_to(x, bm, 0), bg * qw.k_group, 1)
     mp, kp = xp.shape
     gp = kp // qw.k_group
-    pkp = qw.packed
-    pb_full = gp * planes * qw.k_group // 8
-    if pkp.shape[1] < pb_full:
-        pkp = jnp.pad(pkp, ((0, 0), (0, pb_full - pkp.shape[1])))
-    pkp = _pad_to(pkp, bn, 0)
-    wsp = _pad_to(qw.scale.astype(jnp.float32), bn, 0)
+    pkp, wsp = _pad_packed(qw, gp, bn)
     out = dequant_mpgemm_pallas(
         xp, pkp, wsp, k_group=qw.k_group, planes=planes,
         plane_scales=qw.plane_scales,

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 __all__ = ["table_precompute_pallas"]
 
 
@@ -87,7 +89,7 @@ def table_precompute_pallas(
         values = pl.pallas_call(
             kern, grid=grid, in_specs=in_specs, out_specs=out_specs,
             out_shape=out_shape,
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=CompilerParams(
                 dimension_semantics=("parallel", "parallel")),
             interpret=interpret,
         )(a, ts_arg)
@@ -108,7 +110,7 @@ def table_precompute_pallas(
         scale, values = pl.pallas_call(
             kern2, grid=grid, in_specs=in_specs[:1], out_specs=out_specs,
             out_shape=out_shape,
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=CompilerParams(
                 dimension_semantics=("parallel", "parallel")),
             interpret=interpret,
         )(a)
@@ -123,7 +125,7 @@ def table_precompute_pallas(
     values = pl.pallas_call(
         kern3, grid=grid, in_specs=in_specs[:1], out_specs=out_specs,
         out_shape=out_shape,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(a)

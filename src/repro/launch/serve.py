@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
+from repro.core.mpgemm import FUSION_MODES, MPGEMM_MODES
 from repro.models import api
 from repro.serving.engine import Request, ServingEngine
 
@@ -28,14 +29,19 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--mode", default="lut_xla",
-                    choices=["fp16", "dequant", "lut_xla", "lut_pallas"])
+                    choices=list(MPGEMM_MODES))
+    ap.add_argument("--fusion", default="auto",
+                    choices=list(FUSION_MODES),
+                    help="lut_pallas precompute placement: fused keeps the "
+                         "table in VMEM, staged round-trips it through HBM")
     ap.add_argument("--weight-bits", type=int, default=2)
     args = ap.parse_args(argv)
 
     cfg = (registry.get_reduced(args.arch) if args.reduced
            else registry.get_config(args.arch))
     cfg = cfg.replace(activation_dtype=jnp.float32)
-    cfg = cfg.with_quant(mpgemm_mode=args.mode, weight_bits=args.weight_bits)
+    cfg = cfg.with_quant(mpgemm_mode=args.mode, weight_bits=args.weight_bits,
+                         fusion=args.fusion)
 
     print(f"init + quantize ({args.mode}, W{args.weight_bits}) ...")
     quantized = args.mode != "fp16"

@@ -85,6 +85,7 @@ def lut_dense(p: Params, x: jax.Array, quant: Optional[dict] = None,
             mode=q.get("mpgemm_mode", "lut_xla"),
             table_quant=q.get("table_quant", "per_row"),
             table=table,
+            fusion=q.get("fusion", "auto"),
         )
     else:
         w = p["w"]
@@ -99,16 +100,44 @@ def lut_dense(p: Params, x: jax.Array, quant: Optional[dict] = None,
     return y
 
 
+def resolve_fusion(m: int, k: int, quant: dict) -> str:
+    """Resolve the lut_pallas ``fusion`` knob to "fused"/"staged" for a table
+    shared across consumers of one [m, k] activation.
+
+    Delegates to ops.auto_fusion (the same clamp + scheduler decision the
+    per-call dispatch uses) with one approximation: N differs per consumer,
+    so the decision uses the scheduler's maximum elongation (n=2048) —
+    ``fused_tile_bytes`` only grows with bn, so fused fitting there implies
+    it fits for every real consumer with the same clamped bm/bg.
+    """
+    fusion = quant.get("fusion", "auto")
+    if fusion != "auto":
+        return fusion
+    from repro.kernels.ops import auto_fusion
+    kg = quant.get("k_group", 4)
+    return auto_fusion(m, 2048, max(1, k // kg), kg,
+                       quant.get("weight_bits", 2))
+
+
 def make_table(x: jax.Array, quant: Optional[dict]):
     """Precompute a shared lookup table for all consumers of ``x`` (§3.1.1).
 
     Returns None unless the quant config uses a LUT mode — dense and dequant
-    paths have no table.
+    paths have no table. Also None when the Pallas path will run the fused
+    kernel (``fusion="fused"``, or ``"auto"`` resolving to fused): the fused
+    kernel rebuilds the table in-VMEM per consumer (§3.1.1 fused DFG), so a
+    shared HBM table would defeat the point — and supplying one would force
+    ops.lut_mpgemm onto the staged path, making the knob a no-op. Consumers
+    that share an input instead amortize the (cheap, depth-K) MXU recompute.
     """
     if not quant:
         return None
     if quant.get("mpgemm_mode") not in ("lut_xla", "lut_pallas"):
         return None
+    if quant.get("mpgemm_mode") == "lut_pallas":
+        m = max(1, math.prod(x.shape[:-1]))
+        if resolve_fusion(m, x.shape[-1], quant) == "fused":
+            return None
     return mp.precompute_tables(
         x, quant.get("k_group", 4), quant.get("table_quant", "per_row"))
 

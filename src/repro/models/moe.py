@@ -65,14 +65,23 @@ def _expert_ffn(w, x, quant):
         mode = (quant or {}).get("mpgemm_mode", "lut_xla")
         tq = (quant or {}).get("table_quant", "per_row")
         kg = (quant or {}).get("k_group", 4)
+        fusion = (quant or {}).get("fusion", "auto")
+        # fused lut_pallas rebuilds tables in-VMEM — sharing one via HBM
+        # would force the staged path; resolve auto the same way layers do
+        # (x is [E, C, D]: per-expert tables are [C, D]-shaped)
+        share = mode == "lut_xla" or (
+            mode == "lut_pallas"
+            and L.resolve_fusion(x.shape[1], x.shape[2], quant or {})
+            == "staged")
 
         def one(xe, gq, uq, dq):
-            tbl = (precompute_tables(xe, kg, tq)
-                   if mode in ("lut_xla", "lut_pallas") else None)
-            g = mpgemm(xe, gq, mode=mode, table_quant=tq, table=tbl)
-            u = mpgemm(xe, uq, mode=mode, table_quant=tq, table=tbl)
+            tbl = precompute_tables(xe, kg, tq) if share else None
+            g = mpgemm(xe, gq, mode=mode, table_quant=tq, table=tbl,
+                       fusion=fusion)
+            u = mpgemm(xe, uq, mode=mode, table_quant=tq, table=tbl,
+                       fusion=fusion)
             h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
-            return mpgemm(h, dq, mode=mode, table_quant=tq)
+            return mpgemm(h, dq, mode=mode, table_quant=tq, fusion=fusion)
 
         return jax.vmap(one)(x, w["gate_qw"], w["up_qw"], w["down_qw"])
     gate, up, down = w["gate"], w["up"], w["down"]

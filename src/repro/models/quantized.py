@@ -34,7 +34,18 @@ def _quantize_2d(w, quant) -> Q.QuantizedWeight:
 
 
 def quantize_params(params: Dict[str, Any], quant: dict) -> Dict[str, Any]:
-    """Returns a new tree with projections replaced by packed weights."""
+    """Returns a new tree with projections replaced by packed weights.
+
+    Validates the serving-path dispatch keys here, at conversion time, so a
+    bad ``mpgemm_mode``/``fusion`` fails before the first jitted forward.
+    """
+    from repro.core.mpgemm import FUSION_MODES, MPGEMM_MODES
+    mode = quant.get("mpgemm_mode", "lut_xla")
+    if mode not in MPGEMM_MODES:
+        raise ValueError(f"mpgemm_mode {mode!r} not in {MPGEMM_MODES}")
+    fusion = quant.get("fusion", "auto")
+    if fusion not in FUSION_MODES:
+        raise ValueError(f"fusion {fusion!r} not in {FUSION_MODES}")
     kg = quant.get("k_group", 4)
 
     def walk(node, path):

@@ -10,7 +10,12 @@
 """
 
 import numpy as np
+import pytest
 import jax.numpy as jnp
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; "
+    "pip install -r requirements.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import packing, quantize as Q, reinterpret as R, table as T

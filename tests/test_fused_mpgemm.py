@@ -1,0 +1,189 @@
+"""Fused precompute→lookup kernel: parity contracts (interpret mode).
+
+The fused kernel must be indistinguishable from the staged
+``table_precompute_pallas`` + ``lut_mpgemm_pallas`` composition:
+
+  * bit-exact on the per_row int8 path (same closed-form scale, exact int32
+    accumulation, no cross-block float reduction);
+  * float-tolerance-equal for float tables and per_group quantization;
+  * equal to the pure-jnp oracle (ref.ref_lut_mpgemm_matmul) everywhere.
+
+Sweeps k_group ∈ {2, 4}, planes ∈ {1, 2, 4} (weight bits), and all three
+table-quant modes, plus the dispatch knob (auto/fused/staged) and the
+end-to-end mpgemm routing.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import quantize as Q
+from repro.core.lmma import LMMADescriptor, fused_tile_bytes, select_fusion
+from repro.core.mpgemm import mpgemm
+from repro.kernels import ops, ref
+
+BLK = dict(block_m=8, block_n=128, block_g=8, interpret=True)
+
+
+def _mk(m, k, n, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    return a, w
+
+
+def _staged(a, qw, tq):
+    return ops.lut_mpgemm(a, qw, table_quant=tq, fusion="staged", **BLK)
+
+
+# ---------------------------------------------------------------------------
+# parity: fused vs staged composition vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tq", [None, "per_row", "per_group"])
+@pytest.mark.parametrize("bits", [1, 2, 4])  # planes ∈ {1, 2, 4}
+@pytest.mark.parametrize("k_group", [2, 4])
+def test_fused_matches_staged_and_ref(k_group, bits, tq):
+    a, w = _mk(8, 64, 128, seed=bits * 10 + k_group)
+    qw = Q.quantize(w, bits, k_group=k_group, scheme="symmetric")
+    fused = ops.fused_lut_mpgemm(a, qw, table_quant=tq, **BLK)
+    staged = _staged(a, qw, tq)
+    want = ref.ref_lut_mpgemm_matmul(a, qw, table_quant=tq)
+    if tq == "per_row":  # int8 path: bit-exact with the staged pipeline
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(staged))
+    else:
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(staged),
+                                   rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_ternary():
+    """BitNet ternary: two ±1 planes sharing one table."""
+    a, w = _mk(8, 64, 128, seed=5)
+    qw = Q.quantize(w, 2, k_group=4, scheme="ternary")
+    fused = ops.fused_lut_mpgemm(a, qw, table_quant="per_row", **BLK)
+    np.testing.assert_array_equal(np.asarray(fused),
+                                  np.asarray(_staged(a, qw, "per_row")))
+
+
+def test_fused_zero_point_correction():
+    """Asymmetric weights exercise the rank-1 z' update outside the kernel."""
+    a, w = _mk(8, 64, 128, seed=6)
+    qw = Q.quantize(w, 2, k_group=4, scheme="asymmetric")
+    fused = ops.fused_lut_mpgemm(a, qw, table_quant="per_row", **BLK)
+    want = ref.ref_lut_mpgemm_matmul(a, qw, table_quant="per_row")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_unaligned_shapes():
+    """M, K, N not multiples of the blocks: zero-padding must be inert."""
+    a, w = _mk(13, 72, 130, seed=7)
+    qw = Q.quantize(w, 2, k_group=4, scheme="symmetric")
+    fused = ops.fused_lut_mpgemm(a, qw, table_quant="per_row", **BLK)
+    want = ref.ref_lut_mpgemm_matmul(a, qw, table_quant="per_row")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_odd_group_count_realigns_blocks():
+    """g=3, planes=1: clamping bg to g breaks packed-stream byte alignment
+    unless the wrapper realigns (regression: 'K-block must be byte aligned')."""
+    a, w = _mk(8, 12, 16, seed=14)
+    qw = Q.quantize(w, 1, k_group=4, scheme="symmetric")
+    for fusion in ("fused", "staged", "auto"):
+        got = ops.lut_mpgemm(a, qw, table_quant="per_row", fusion=fusion,
+                             interpret=True)
+        want = ref.ref_lut_mpgemm_matmul(a, qw, table_quant="per_row")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_fused_bf16_activations():
+    a, w = _mk(8, 64, 128, seed=8, dtype=jnp.bfloat16)
+    qw = Q.quantize(w, 2, k_group=4, scheme="symmetric")
+    fused = ops.fused_lut_mpgemm(a, qw, table_quant="per_row", **BLK)
+    np.testing.assert_array_equal(np.asarray(fused),
+                                  np.asarray(_staged(a, qw, "per_row")))
+
+
+# ---------------------------------------------------------------------------
+# dispatch: the fusion knob and the LMMA scheduler decision
+# ---------------------------------------------------------------------------
+
+def test_fusion_knob_dispatch():
+    a, w = _mk(8, 64, 128, seed=9)
+    qw = Q.quantize(w, 2, k_group=4, scheme="symmetric")
+    fused = ops.lut_mpgemm(a, qw, table_quant="per_row", fusion="fused", **BLK)
+    auto = ops.lut_mpgemm(a, qw, table_quant="per_row", fusion="auto", **BLK)
+    staged = _staged(a, qw, "per_row")
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(staged))
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(staged))
+    with pytest.raises(ValueError):
+        ops.lut_mpgemm(a, qw, fusion="bogus", **BLK)
+
+
+def test_supplied_table_implies_staged():
+    """A shared (§3.1.1 amortized) table must short-circuit fusion."""
+    a, w = _mk(8, 64, 128, seed=10)
+    qw = Q.quantize(w, 2, k_group=4, scheme="symmetric")
+    t = ops.table_precompute(a, 4, "per_row", block_m=8, block_g=8,
+                             interpret=True)
+    got = ops.lut_mpgemm(a, qw, table=t, fusion="fused", **BLK)
+    want = ref.ref_lut_mpgemm_matmul(a, qw, table=t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_select_fusion_vmem_budget():
+    from repro.core.lmma import TileSchedule, schedule_tiles
+    desc = LMMADescriptor(m=256, n=4096, k=4096, w_bits=2, k_group=4)
+    assert select_fusion(desc) == "fused"  # scheduler tiles always fit
+    # exactly at the working set the decision flips: one byte under → staged
+    ts = schedule_tiles(desc)
+    need = fused_tile_bytes(ts.bm, ts.bn, ts.bg, desc)
+    assert select_fusion(desc, ts, vmem_budget=need) == "fused"
+    assert select_fusion(desc, ts, vmem_budget=need - 1) == "staged"
+    # a hand-pinned oversized tile must fall back to staged
+    huge = TileSchedule(bm=4096, bn=4096, bg=4096, table_bytes=0,
+                        weight_bytes=0, acc_bytes=0, vmem_bytes=0)
+    assert select_fusion(desc, huge) == "staged"
+
+
+def test_fused_tile_bytes_counts_table_block():
+    desc = LMMADescriptor(m=64, n=512, k=1024, w_bits=2, k_group=4)
+    e = 1 << (desc.k_group - 1)
+    got = fused_tile_bytes(8, 128, 16, desc)
+    assert got >= 8 * 16 * e * 4  # at least the f32 entries block
+
+
+# ---------------------------------------------------------------------------
+# end-to-end routing: mpgemm(..., fusion=...) with leading batch dims
+# ---------------------------------------------------------------------------
+
+def test_make_table_defers_to_fusion():
+    """The model path must not force staged by pre-building a shared table
+    when the Pallas path will (or may) run fused."""
+    from repro.models.layers import make_table
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.normal(size=(2, 4, 64)), jnp.float32)
+    base = {"mpgemm_mode": "lut_pallas", "table_quant": "per_row"}
+    assert make_table(x, {**base, "fusion": "fused"}) is None
+    assert make_table(x, base) is None            # auto → scheduler → fused
+    assert make_table(x, {**base, "fusion": "staged"}) is not None
+    assert make_table(x, {"mpgemm_mode": "lut_xla"}) is not None
+    assert make_table(x, {"mpgemm_mode": "dequant"}) is None
+
+
+def test_mpgemm_fusion_routing():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(2, 4, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(128, 64)), jnp.float32)
+    qw = Q.quantize(w, 2, k_group=4, scheme="symmetric")
+    got = mpgemm(x, qw, mode="lut_pallas", fusion="fused", interpret=True)
+    want = mpgemm(x, qw, mode="lut_pallas", fusion="staged", interpret=True)
+    assert got.shape == (2, 4, 128)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-4, atol=1e-4)

@@ -67,8 +67,8 @@ def test_lut_kernel_schemes(scheme, bits, k_group):
     a, w = _mk(16, 128, 384)
     qw = Q.quantize(w, bits, k_group=k_group, scheme=scheme)
     want = ref.ref_lut_mpgemm_matmul(a, qw, table_quant=None)
-    got = ops.lut_mpgemm(a, qw, table_quant=None, block_m=8, block_n=128,
-                         block_g=8, interpret=True)
+    got = ops.lut_mpgemm(a, qw, table_quant=None, fusion="staged",
+                         block_m=8, block_n=128, block_g=8, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
 
@@ -78,8 +78,8 @@ def test_lut_kernel_table_quant(tq):
     a, w = _mk(16, 128, 256, seed=3)
     qw = Q.quantize(w, 2, k_group=4, scheme="symmetric")
     want = ref.ref_lut_mpgemm_matmul(a, qw, table_quant=tq)
-    got = ops.lut_mpgemm(a, qw, table_quant=tq, block_m=8, block_n=128,
-                         block_g=8, interpret=True)
+    got = ops.lut_mpgemm(a, qw, table_quant=tq, fusion="staged",
+                         block_m=8, block_n=128, block_g=8, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
 
@@ -89,8 +89,8 @@ def test_lut_kernel_shape_sweep(m, k, n):
     a, w = _mk(m, k, n, seed=m + k + n)
     qw = Q.quantize(w, 2, k_group=4, scheme="symmetric")
     want = ref.ref_lut_mpgemm_matmul(a, qw, table_quant="per_row")
-    got = ops.lut_mpgemm(a, qw, table_quant="per_row", block_m=8,
-                         block_n=128, block_g=8, interpret=True)
+    got = ops.lut_mpgemm(a, qw, table_quant="per_row", fusion="staged",
+                         block_m=8, block_n=128, block_g=8, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
 
