@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: install test test-fast bench-smoke
+.PHONY: install test test-fast bench-smoke bench-serving
 
 install:
 	$(PYTHON) -m pip install -r requirements.txt
@@ -19,3 +19,6 @@ test-fast:       ## kernel + core contracts only (minutes, not tens of)
 bench-smoke:     ## quick analytic benchmark pass (no kernels executed)
 	$(PYTHON) benchmarks/bench_fused_mpgemm.py --smoke
 	$(PYTHON) benchmarks/roofline_table.py 2>/dev/null || true
+
+bench-serving:   ## serving-engine perf (chunked vs per-tick decode) -> JSON
+	$(PYTHON) benchmarks/bench_serving.py --out BENCH_serving.json

@@ -1,0 +1,143 @@
+"""Serving-engine benchmark: per-tick host-driven decode vs device-resident
+chunked decode.
+
+The paper's payoff regime is batched decode (memory-bound GEMV-shaped
+mpGEMM); the engine's job is to not spend that win on host round-trips.
+This bench runs the SAME request workload through the engine at a sweep of
+``decode_chunk`` settings (1 = the historical one-dispatch-per-token loop)
+and reports, per setting:
+
+  * tok/s over the whole run (prefill + decode wall-clock),
+  * host syncs per generated token (measured from engine counters; the
+    device-resident loop targets <= 1/decode_chunk),
+  * p50/p95 decode-chunk dispatch latency.
+
+Results go to stdout and, with ``--out``, to a JSON file so the perf
+trajectory is machine-readable (``make bench-serving`` writes
+``BENCH_serving.json``).
+
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke
+    PYTHONPATH=src python benchmarks/bench_serving.py --out BENCH_serving.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import api
+from repro.serving.engine import Request, ServingEngine
+
+
+def _requests(cfg, n, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(4, 24))
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size, plen, dtype=np.int32),
+            max_new_tokens=max_new))
+    return reqs
+
+
+def run_one(cfg, params, *, decode_chunk, args):
+    eng = ServingEngine(cfg, params, max_batch=args.max_batch,
+                        max_seq=args.max_seq, decode_chunk=decode_chunk,
+                        prefill_chunk=args.prefill_chunk)
+    # warmup: compile decode/prefill/merge off the clock
+    for r in _requests(cfg, args.max_batch, 2, seed=1):
+        eng.submit(r)
+    eng.run_to_completion()
+    eng.reset()
+
+    for r in _requests(cfg, args.requests, args.max_new, seed=0):
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run_to_completion()
+    wall = time.perf_counter() - t0
+
+    st = eng.stats()
+    st.update({
+        "wall_s": wall,
+        "tok_s": st["decode_tokens"] / wall,
+        "sync_bound": 1.0 / decode_chunk,
+        "meets_sync_bound":
+            st["host_syncs_per_token"] <= 1.0 / decode_chunk + 1e-12,
+    })
+    return st
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--full", action="store_true",
+                    help="published config (default: reduced smoke dims)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest footprint: fewer requests/tokens")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--decode-chunks", default="1,8,16",
+                    help="comma list of decode_chunk settings; 1 = the "
+                         "per-tick baseline")
+    ap.add_argument("--mode", default="lut_xla")
+    ap.add_argument("--weight-bits", type=int, default=2)
+    ap.add_argument("--out", default=None, help="write JSON here")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.requests, args.max_new = 4, 16
+
+    cfg = (registry.get_config(args.arch) if args.full
+           else registry.get_reduced(args.arch))
+    cfg = cfg.replace(activation_dtype=jnp.float32)
+    cfg = cfg.with_quant(mpgemm_mode=args.mode, weight_bits=args.weight_bits)
+    params = api.init_params(jax.random.key(0), cfg, serve_quantized=True)
+
+    chunks = [int(c) for c in args.decode_chunks.split(",")]
+    runs = []
+    for dc in chunks:
+        st = run_one(cfg, params, decode_chunk=dc, args=args)
+        runs.append(st)
+        print(f"decode_chunk={dc:>3}: {st['tok_s']:8.1f} tok/s  "
+              f"syncs/tok {st['host_syncs_per_token']:.4f} "
+              f"(bound {st['sync_bound']:.4f}, "
+              f"{'OK' if st['meets_sync_bound'] else 'VIOLATED'})  "
+              f"chunk p50 {st['p50_chunk_ms']:.1f} ms "
+              f"p95 {st['p95_chunk_ms']:.1f} ms")
+
+    result = {
+        "bench": "serving",
+        "arch": args.arch,
+        "reduced": not args.full,
+        "mode": args.mode,
+        "weight_bits": args.weight_bits,
+        "max_batch": args.max_batch,
+        "max_seq": args.max_seq,
+        "requests": args.requests,
+        "max_new": args.max_new,
+        "runs": runs,
+    }
+    base = next((r for r in runs if r["decode_chunk"] == 1), None)
+    best = max(runs, key=lambda r: r["tok_s"])
+    if base is not None:
+        result["speedup_best_vs_per_tick"] = best["tok_s"] / base["tok_s"]
+        print(f"best ({best['decode_chunk']}-token chunks) vs per-tick: "
+              f"{result['speedup_best_vs_per_tick']:.2f}x")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

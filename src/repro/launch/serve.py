@@ -1,8 +1,9 @@
 """Serving driver: quantize a model to the packed low-bit format and serve a
-batch of requests through the continuous-batching engine.
+batch of requests through the device-resident continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --reduced --requests 12 --max-new 24 --mode lut_xla
+        --reduced --requests 12 --max-new 24 --mode lut_xla \
+        --decode-chunk 8 --temperature 0.8 --top-k 40 --top-p 0.95
 """
 
 from __future__ import annotations
@@ -28,6 +29,20 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="decode steps per device dispatch (host syncs once "
+                         "per chunk, not once per token)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="fixed prompt-chunk shape for admission prefill "
+                         "(one compiled program for all prompt lengths)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (<=0 greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="per-request top-k (0 disables)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="per-request nucleus mass (>=1 disables)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop a slot when it samples this token id")
     ap.add_argument("--mode", default="lut_xla",
                     choices=list(MPGEMM_MODES))
     ap.add_argument("--fusion", default="auto",
@@ -51,20 +66,28 @@ def main(argv=None):
         cfg = cfg.replace(quant=None)
 
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,
-                        max_seq=args.max_seq)
+                        max_seq=args.max_seq,
+                        decode_chunk=args.decode_chunk,
+                        prefill_chunk=args.prefill_chunk,
+                        eos_id=args.eos_id)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(rng.integers(4, 24))
         eng.submit(Request(
             uid=i, prompt=rng.integers(0, cfg.vocab_size, plen, dtype=np.int32),
-            max_new_tokens=args.max_new))
+            max_new_tokens=args.max_new, temperature=args.temperature,
+            top_k=args.top_k, top_p=args.top_p))
     t0 = time.time()
-    ticks = eng.run_to_completion()
+    chunks = eng.run_to_completion()
     dt = time.time() - t0
-    total_new = args.requests * args.max_new
+    st = eng.stats()
+    total_new = st["decode_tokens"]
     print(f"served {args.requests} requests / {total_new} tokens in "
-          f"{dt:.2f}s ({ticks} ticks, {total_new/dt:.1f} tok/s, "
+          f"{dt:.2f}s ({chunks} chunk cycles, {total_new/dt:.1f} tok/s, "
           f"continuous batching over {args.max_batch} slots)")
+    print(f"host syncs/token {st['host_syncs_per_token']:.4f} "
+          f"(decode_chunk={args.decode_chunk}), chunk latency "
+          f"p50 {st['p50_chunk_ms']:.1f} ms / p95 {st['p95_chunk_ms']:.1f} ms")
     return 0
 
 

@@ -59,7 +59,8 @@ class _SsmLM:
         }
 
     @staticmethod
-    def forward(params, batch, cfg, *, caches=None, cache_pos=0, window=None):
+    def forward(params, batch, cfg, *, caches=None, cache_pos=0, window=None,
+                token_valid=None):
         h = transformer.embed_apply(params["embed"], batch["tokens"])
         h = h.astype(cfg.activation_dtype)
 
@@ -70,7 +71,8 @@ class _SsmLM:
             lc = None if caches is None else xs[1]
             y, nc = ssm.mamba_apply(lp["ssm"],
                                     L.rms_norm(lp["norm"], hh, cfg.norm_eps),
-                                    cfg, cache=lc, quant=cfg.quant)
+                                    cfg, cache=lc, quant=cfg.quant,
+                                    token_valid=token_valid)
             return hh + y, nc
 
         body = jax.checkpoint(body, prevent_cse=False)

@@ -101,7 +101,8 @@ def compute_cross_kv(params: Params, enc_out: jax.Array, cfg):
 
 
 def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
-            window=None) -> Tuple[jax.Array, Any, Dict]:
+            window=None, token_valid=None) -> Tuple[jax.Array, Any, Dict]:
+    del token_valid  # attention-only stack: see transformer.forward
     tokens = batch["tokens"]
     quant = cfg.quant
     b, s = tokens.shape

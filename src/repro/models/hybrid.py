@@ -59,9 +59,10 @@ def init(key, cfg, dtype=None) -> Params:
     return params
 
 
-def _mamba_layer_apply(p, h, cfg, cache, quant):
+def _mamba_layer_apply(p, h, cfg, cache, quant, token_valid=None):
     y, nc = ssm.mamba2_apply(p["ssm"], L.rms_norm(p["norm"], h, cfg.norm_eps),
-                             cfg, cache=cache, quant=quant)
+                             cfg, cache=cache, quant=quant,
+                             token_valid=token_valid)
     return shard(h + y, "batch", "seq", None), nc
 
 
@@ -76,7 +77,10 @@ def _shared_apply(p, h, cfg, kv, cache_pos, window, quant):
 
 
 def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
-            window=None) -> Tuple[jax.Array, Any, Dict]:
+            window=None, token_valid=None) -> Tuple[jax.Array, Any, Dict]:
+    # token_valid [B]: real-token counts for right-padded chunked prefill —
+    # consumed by the mamba2 layers (state masking); the shared attention
+    # block needs no masking (see transformer.forward).
     tokens = batch["tokens"]
     quant = cfg.quant
     h = TR.embed_apply(params["embed"], tokens).astype(cfg.activation_dtype)
@@ -99,7 +103,7 @@ def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
             lp = lxs if mcache is None else lxs[0]
             lp = constrain_tree(lp)  # §Perf T1
             lc = None if mcache is None else lxs[1]
-            c2, nc = _mamba_layer_apply(lp, c, cfg, lc, quant)
+            c2, nc = _mamba_layer_apply(lp, c, cfg, lc, quant, token_valid)
             return c2, nc
 
         inner = jax.checkpoint(inner, prevent_cse=False)
@@ -123,7 +127,7 @@ def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
             lp = lxs if tail_caches is None else lxs[0]
             lp = constrain_tree(lp)  # §Perf T1
             lc = None if tail_caches is None else lxs[1]
-            return _mamba_layer_apply(lp, c, cfg, lc, quant)
+            return _mamba_layer_apply(lp, c, cfg, lc, quant, token_valid)
         tbody = jax.checkpoint(tbody, prevent_cse=False)
         txs = params["tail"] if tail_caches is None else (params["tail"], tail_caches)
         h, new_tail = jax.lax.scan(tbody, h, txs)

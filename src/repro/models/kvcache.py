@@ -13,9 +13,11 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["attn_cache", "mamba_cache", "mamba2_cache", "cache_len"]
+__all__ = ["attn_cache", "mamba_cache", "mamba2_cache", "cache_len",
+           "batch_axes", "slice_batch", "merge_batch"]
 
 
 def attn_cache(n_layers: int, batch: int, s_cache: int, n_kv: int, head_dim: int,
@@ -51,3 +53,40 @@ def mamba2_cache(n_layers: int, batch: int, n_heads: int, head_dim: int,
 def cache_len(cache) -> int:
     """Sequence capacity of an attention cache."""
     return cache[0].shape[2]
+
+
+# ---------------------------------------------------------------------------
+# per-slot views (continuous-batching engine)
+# ---------------------------------------------------------------------------
+# The batch dim is NOT a fixed axis across cache layouts: plain stacks carry
+# it at axis 1 ([L, B, ...]) but e.g. the zamba2 hybrid stacks its mamba
+# leaves [n_groups, attn_every, B, ...]. ``batch_axes`` discovers the axis
+# per leaf by diffing the shapes of two differently-batched cache structs
+# (cheap: eval_shape only), and slice/merge then give the serving engine an
+# O(slot)-sized view of one slot's state for chunked prefill.
+
+def batch_axes(cache_b1, cache_b2):
+    """Per-leaf batch axis, from two cache structs built with batch=1/2."""
+    def one(a, b):
+        diffs = [i for i, (p, q) in enumerate(zip(a.shape, b.shape))
+                 if p != q]
+        if len(diffs) != 1:
+            raise ValueError(
+                f"ambiguous batch axis for cache leaf {a.shape} vs {b.shape}")
+        return diffs[0]
+    return jax.tree.map(one, cache_b1, cache_b2)
+
+
+def slice_batch(caches, axes, idx):
+    """Extract slot ``idx`` as a batch-1 cache pytree (dynamic, jit-safe)."""
+    return jax.tree.map(
+        lambda c, ax: jax.lax.dynamic_slice_in_dim(c, idx, 1, axis=ax),
+        caches, axes)
+
+
+def merge_batch(caches, slot_caches, axes, idx):
+    """Write a batch-1 cache pytree back into slot ``idx`` of the pool."""
+    return jax.tree.map(
+        lambda c, sc, ax: jax.lax.dynamic_update_slice_in_dim(
+            c, sc.astype(c.dtype), idx, axis=ax),
+        caches, slot_caches, axes)

@@ -315,7 +315,8 @@ def init(key, cfg, dtype=None) -> Params:
 
 
 def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
-            window=None) -> Tuple[jax.Array, Any, Dict]:
+            window=None, token_valid=None) -> Tuple[jax.Array, Any, Dict]:
+    del token_valid  # attention-only stack: see transformer.forward
     tokens = batch["tokens"]
     quant = cfg.quant
     h = TR.embed_apply(params["embed"], tokens).astype(cfg.activation_dtype)

@@ -35,8 +35,15 @@ Params = Dict[str, Any]
 # depthwise causal conv (shared by mamba1/2)
 # ---------------------------------------------------------------------------
 
-def _causal_dwconv(x, conv_w, conv_b, conv_state=None):
-    """x [B,S,C], conv_w [W,C] depthwise causal; returns (y, new_state)."""
+def _causal_dwconv(x, conv_w, conv_b, conv_state=None, valid=None):
+    """x [B,S,C], conv_w [W,C] depthwise causal; returns (y, new_state).
+
+    ``valid`` ([B] count of real tokens from the left, None = all) makes the
+    carried conv state end at each row's last *real* token, so a right-padded
+    tail chunk (the serving engine's fixed-shape chunked prefill) leaves the
+    state exactly as if only the real tokens had been seen. Conv *outputs*
+    are causal, so real positions are unaffected by the padding either way.
+    """
     b, s, c = x.shape
     w = conv_w.shape[0]
     if conv_state is None:
@@ -48,9 +55,27 @@ def _causal_dwconv(x, conv_w, conv_b, conv_state=None):
     for i in range(w):  # W is tiny (4): unrolled taps beat a conv call
         y = y + xp[:, i:i + s, :].astype(jnp.float32) * conv_w[i].astype(jnp.float32)
     y = y + conv_b.astype(jnp.float32)
-    new_state = (xp[:, -(w - 1):, :] if w > 1
-                 else jnp.zeros((b, 0, c), x.dtype))
+    if w == 1:
+        new_state = jnp.zeros((b, 0, c), x.dtype)
+    elif valid is None:
+        new_state = xp[:, -(w - 1):, :]
+    else:
+        # token j of x sits at xp[:, j + w - 1]; the state after `valid`
+        # real tokens is xp[:, valid : valid + w - 1]
+        idx = valid[:, None] + jnp.arange(w - 1)[None, :]
+        new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
     return y.astype(x.dtype), new_state
+
+
+def _mask_dt(dt, token_valid):
+    """Zero dt at padded positions: decay=exp(0)=1 and input=0 make the
+    selective-scan update a no-op there, so padded tails never touch the
+    carried SSM state (same identity the internal chunk padding relies on)."""
+    if token_valid is None:
+        return dt
+    s = dt.shape[1]
+    mask = jnp.arange(s)[None, :] < token_valid[:, None]  # [B, S]
+    return dt * mask[..., None]
 
 
 # ---------------------------------------------------------------------------
@@ -106,8 +131,13 @@ def mamba_init(key, cfg, dtype=jnp.float32) -> Params:
     }
 
 
-def mamba_apply(p: Params, x: jax.Array, cfg, *, cache=None, quant=None):
-    """x [B,S,D] -> (y [B,S,D], new_cache). cache={"conv","ssm"} for decode."""
+def mamba_apply(p: Params, x: jax.Array, cfg, *, cache=None, quant=None,
+                token_valid=None):
+    """x [B,S,D] -> (y [B,S,D], new_cache). cache={"conv","ssm"} for decode.
+
+    ``token_valid`` [B]: per-row count of real (left-aligned) tokens; padded
+    tail positions leave conv + SSM state untouched (chunked-prefill path).
+    """
     b, s, d = x.shape
     di, ds = cfg.d_inner, cfg.ssm_state
     tbl = L.make_table(x, quant)
@@ -116,13 +146,15 @@ def mamba_apply(p: Params, x: jax.Array, cfg, *, cache=None, quant=None):
     xp = shard(xp, "batch", "seq", "model")
 
     conv_state = None if cache is None else cache["conv"]
-    xc, new_conv = _causal_dwconv(xp, p["conv_w"], p["conv_b"], conv_state)
+    xc, new_conv = _causal_dwconv(xp, p["conv_w"], p["conv_b"], conv_state,
+                                  valid=token_valid)
     xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
 
     dbc = L.lut_dense(p["x_proj"], xc, quant)
     dt, bmat, cmat = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + ds], axis=-1)
     dt = jax.nn.softplus(
         L.lut_dense(p["dt_proj"], dt, quant).astype(jnp.float32))  # [B,S,di]
+    dt = _mask_dt(dt, token_valid)
     a = -jnp.exp(p["A_log"].astype(jnp.float32))  # [di, ds]
     xf = xc.astype(jnp.float32)
     bf = bmat.astype(jnp.float32)
@@ -183,7 +215,8 @@ def mamba2_init(key, cfg, dtype=jnp.float32) -> Params:
     }
 
 
-def mamba2_apply(p: Params, x: jax.Array, cfg, *, cache=None, quant=None):
+def mamba2_apply(p: Params, x: jax.Array, cfg, *, cache=None, quant=None,
+                 token_valid=None):
     b, s, d = x.shape
     di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
     hd = di // nh
@@ -194,11 +227,13 @@ def mamba2_apply(p: Params, x: jax.Array, cfg, *, cache=None, quant=None):
     xp = shard(xp, "batch", "seq", "model")
 
     conv_state = None if cache is None else cache["conv"]
-    xc, new_conv = _causal_dwconv(xp, p["conv_w"], p["conv_b"], conv_state)
+    xc, new_conv = _causal_dwconv(xp, p["conv_w"], p["conv_b"], conv_state,
+                                  valid=token_valid)
     xc = jax.nn.silu(xc.astype(jnp.float32))
 
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + p["dt_bias"].astype(jnp.float32))  # [B,S,nh]
+    dt = _mask_dt(dt, token_valid)
     a = -jnp.exp(p["A_log"].astype(jnp.float32))  # [nh]
     xh = xc.reshape(b, s, nh, hd)
     bf = bmat.astype(jnp.float32)

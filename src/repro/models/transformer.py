@@ -126,7 +126,14 @@ def init(key, cfg, dtype=None) -> Params:
 
 
 def forward(params: Params, batch: Dict[str, jax.Array], cfg, *,
-            caches=None, cache_pos=0, window=None) -> Tuple[jax.Array, Any, Dict]:
+            caches=None, cache_pos=0, window=None,
+            token_valid=None) -> Tuple[jax.Array, Any, Dict]:
+    # token_valid ([B] real-token counts for right-padded chunked prefill) is
+    # accepted for interface uniformity but unused: causal attention already
+    # prevents real positions from seeing padded tails, and pad k/v land at
+    # cache positions >= the slot's valid length, which every later read
+    # masks via kv_valid_len (and decode overwrites them in place).
+    del token_valid
     tokens = batch["tokens"]
     h = embed_apply(params["embed"], tokens).astype(cfg.activation_dtype)
     h, new_caches = stack_apply(params["layers"], h, cfg, caches=caches,

@@ -77,7 +77,8 @@ def compute_image_kv(params: Params, image_embeds: jax.Array, cfg):
 
 
 def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
-            window=None) -> Tuple[jax.Array, Any, Dict]:
+            window=None, token_valid=None) -> Tuple[jax.Array, Any, Dict]:
+    del token_valid  # attention-only stack: see transformer.forward
     tokens = batch["tokens"]
     quant = cfg.quant
     h = TR.embed_apply(params["embed"], tokens).astype(cfg.activation_dtype)

@@ -1,34 +1,62 @@
-"""Batched serving engine with continuous batching.
+"""Device-resident continuous-batching decode engine.
 
 The engine owns a fixed pool of ``max_batch`` decode slots backed by one
-static-shape KV cache (per-slot positions; finished slots are refilled from
-the request queue without touching in-flight ones — continuous batching).
-Weights are the packed low-bit serving format (``serve_quantized`` params):
-decode is exactly the mpGEMM regime the paper targets (memory-bound GEMV-ish
-ops where the 4-16x weight-traffic cut pays off).
+static-shape KV/SSM cache. Weights are the packed low-bit serving format
+(``serve_quantized`` params): batched decode is exactly the mpGEMM regime
+the paper targets — memory-bound GEMV-shaped ops where the 4–16x
+weight-traffic cut pays off — so the engine loop must not squander the
+kernel's win on host round-trips.
 
-Two jitted programs:
-  * ``prefill(params, tokens, caches) -> (next_token, caches)``  per request
-    (left-padded to the slot's prompt bucket),
-  * ``decode(params, tokens, caches, pos) -> (next_token, caches)`` for the
-    whole pool, one token per slot per call.
+All per-token control state lives ON DEVICE in an :class:`EngineState`
+pytree (per-slot ``pos``/``budget``/``last_tok``/``active``, per-slot
+sampling params, the PRNG key, and the caches). Three jitted programs:
 
-Per-slot positions: attention masks by each slot's own valid length, so one
-program serves ragged sequence lengths.
+  * ``decode_chunk``: ``jax.lax.scan`` over N decode steps for the whole
+    pool — per-slot active masking, on-device budget/max-seq/EOS stopping,
+    on-device per-slot sampling — emitting a ``[N, B]`` token buffer. The
+    host syncs ONCE per chunk (read tokens + liveness), not once per token.
+  * ``prefill_chunk``: ONE fixed-``[1, C]``-shape program that writes a
+    prompt chunk into a batch-1 slot-cache view at a dynamic cache offset
+    (no per-length recompiles, no B× wasted full-batch forward per admit).
+    The LM head of a prefill chunk is dead code (only caches are returned),
+    so XLA drops the vocab projection entirely.
+  * ``merge``: write the batch-1 slot caches back into the pool at the
+    slot's batch index (per-leaf batch axes via ``kvcache.batch_axes``).
+
+Admission leaves the LAST prompt token out of prefill: it becomes the
+slot's ``last_tok`` at ``pos = len(prompt) - 1``, so the first generated
+token falls out of the decode scan itself — admission costs zero host syncs
+and zero sampling dispatches.
+
+Admit/retire stay on host but only run at chunk boundaries, preserving
+continuous-batching semantics: finished slots are refilled from the queue
+without touching in-flight ones. Per-slot positions mean one program serves
+ragged sequence lengths (attention masks by each slot's own valid length;
+SSM state is position-free).
+
+Known edges (documented, covered by tests):
+  * a prompt longer than ``max_seq`` is truncated to its last
+    ``max(1, max_seq - max_new_tokens)`` tokens (room to generate);
+  * a prompt that already fills the cache (``len == max_seq``) yields no
+    tokens (there is no cache position left to write the first one);
+  * ``max_new_tokens <= 0`` completes immediately with no output;
+  * slots that finish mid-chunk idle until the next chunk boundary (their
+    compute is masked out, their state is reset at the next admit).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import queue
-from typing import Any, Callable, Dict, List, Optional
+import time
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ArchConfig
-from repro.models import api
+from repro.models import api, kvcache
 from repro.serving.sampler import sample
 
 
@@ -37,101 +65,212 @@ class Request:
     uid: int
     prompt: np.ndarray                 # [len] int32
     max_new_tokens: int = 32
-    temperature: float = 0.0
+    temperature: float = 0.0           # <= 0 -> greedy
+    top_k: int = 0                     # 0 -> disabled
+    top_p: float = 1.0                 # >= 1 -> disabled
     done: bool = False
     output: Optional[List[int]] = None
 
 
+@dataclasses.dataclass
+class EngineState:
+    """Device-resident engine state (registered pytree; one leaf per field).
+
+    All leaves are arrays: ``[B]`` per-slot control/sampling vectors, the
+    PRNG key, and the full cache pytree. The decode scan threads the whole
+    state through ``jax.lax.scan``; the host only reads it back at chunk
+    boundaries.
+    """
+    pos: jax.Array          # [B] i32  next cache write position (= valid len)
+    budget: jax.Array       # [B] i32  remaining new tokens
+    last_tok: jax.Array     # [B] i32  next token to feed
+    active: jax.Array       # [B] bool decoding live
+    temperature: jax.Array  # [B] f32  per-slot sampling params
+    top_k: jax.Array        # [B] i32
+    top_p: jax.Array        # [B] f32
+    key: jax.Array          # PRNG key
+    caches: Any             # model cache pytree
+
+
+jax.tree_util.register_dataclass(
+    EngineState,
+    data_fields=["pos", "budget", "last_tok", "active", "temperature",
+                 "top_k", "top_p", "key", "caches"],
+    meta_fields=[])
+
+
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
-                 max_seq: int = 512, seed: int = 0):
+                 max_seq: int = 512, seed: int = 0, decode_chunk: int = 8,
+                 prefill_chunk: int = 32, eos_id: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
-        self.key = jax.random.key(seed)
+        self.decode_chunk = max(1, decode_chunk)
+        self.prefill_chunk = max(1, min(prefill_chunk, max_seq))
+        self.eos_id = eos_id
+        self._seed = seed
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self.pos = np.zeros(max_batch, np.int32)        # next write position
-        self.budget = np.zeros(max_batch, np.int32)     # remaining new tokens
-        self.last_tok = np.zeros(max_batch, np.int32)
-        self.caches = api.init_cache(cfg, max_batch, max_seq,
-                                     dtype=jnp.float32)
-        self._decode = jax.jit(self._decode_impl)
-        self._prefill = jax.jit(self._prefill_impl,
-                                static_argnames=("plen",))
 
-    # -- jitted programs ------------------------------------------------------
-    def _prefill_impl(self, params, caches, tokens, slot, plen):
-        """Prefill one slot with a prompt of (bucketed) length plen."""
+        # per-leaf batch axes of the cache pytree (shape-diff discovery:
+        # hybrid stacks carry batch at axis 2, plain stacks at axis 1)
+        c1 = jax.eval_shape(
+            lambda: api.init_cache(cfg, 1, max_seq, dtype=jnp.float32))
+        c2 = jax.eval_shape(
+            lambda: api.init_cache(cfg, 2, max_seq, dtype=jnp.float32))
+        self._axes = kvcache.batch_axes(c1, c2)
+        # zero batch-1 slot caches: the prefill starting point for every
+        # admit (a retiring request's state must never leak into its slot's
+        # next occupant — SSM states are cumulative)
+        self._zero_slot = api.init_cache(cfg, 1, max_seq, dtype=jnp.float32)
+
+        self._decode = jax.jit(self._decode_chunk_impl)
+        self._prefill = jax.jit(self._prefill_chunk_impl)
+        self._merge = jax.jit(
+            lambda caches, slot, i: kvcache.merge_batch(
+                caches, slot, self._axes, i))
+
+        self.reset(seed=seed)
+
+    # -- lifecycle ----------------------------------------------------------
+    def reset(self, seed: Optional[int] = None):
+        """Clear queue/slots/state/counters; keep compiled programs."""
+        if seed is None:
+            seed = self._seed
         b = self.max_batch
-        full = jnp.zeros((b, plen), jnp.int32).at[slot].set(tokens)
-        logits, new_caches, _ = api.forward(params, {"tokens": full}, self.cfg,
-                                            caches=caches, cache_pos=0)
-        # merge: only this slot's cache rows advance
-        def merge(old, new):
-            if old.ndim < 2 or old.shape[1] != b:
-                return new
-            sel = (jnp.arange(b) == slot)
-            bshape = (1, b) + (1,) * (old.ndim - 2)
-            return jnp.where(sel.reshape(bshape), new.astype(old.dtype), old)
-        merged = jax.tree.map(merge, caches, new_caches)
-        return logits[slot, -1], merged
+        self.queue = queue.Queue()
+        self.slots = [None] * b
+        self.state = EngineState(
+            pos=jnp.zeros(b, jnp.int32),
+            budget=jnp.zeros(b, jnp.int32),
+            last_tok=jnp.zeros(b, jnp.int32),
+            active=jnp.zeros(b, bool),
+            temperature=jnp.zeros(b, jnp.float32),
+            top_k=jnp.zeros(b, jnp.int32),
+            top_p=jnp.ones(b, jnp.float32),
+            key=jax.random.key(seed),
+            caches=api.init_cache(self.cfg, b, self.max_seq,
+                                  dtype=jnp.float32))
+        self.decode_syncs = 0       # host round-trips in the decode loop
+        self.decode_tokens = 0      # tokens emitted by decode chunks
+        self.prefill_dispatches = 0
+        self.chunk_latencies: List[float] = []  # seconds per decode chunk
 
-    def _decode_impl(self, params, caches, tokens, pos, key):
-        """One decode tick for the whole pool. tokens [B,1], pos [B] per-slot
-        positions (ragged continuous batching; attention masks per slot)."""
-        logits, new_caches, _ = api.forward(
-            params, {"tokens": tokens}, self.cfg, caches=caches,
-            cache_pos=pos)
-        nxt = sample(key, logits[:, -1], temperature=0.0)
-        return nxt, new_caches
+    # -- jitted programs ----------------------------------------------------
+    def _prefill_chunk_impl(self, params, slot_caches, tokens, offset, valid):
+        """Write one [1, C] prompt chunk into a batch-1 slot-cache view at
+        cache offset ``offset``; ``valid`` <= C real tokens (right-pad)."""
+        _, new_caches, _ = api.forward(
+            params, {"tokens": tokens}, self.cfg, caches=slot_caches,
+            cache_pos=offset, token_valid=jnp.reshape(valid, (1,)))
+        return new_caches
 
-    # -- engine loop ------------------------------------------------------
+    def _decode_chunk_impl(self, params, state):
+        """N decode steps for the whole pool in one dispatch."""
+        def step(st, _):
+            key, sub = jax.random.split(st.key)
+            logits, new_caches, _ = api.forward(
+                params, {"tokens": st.last_tok[:, None]}, self.cfg,
+                caches=st.caches, cache_pos=st.pos)
+            nxt = sample(sub, logits[:, -1], temperature=st.temperature,
+                         top_k=st.top_k, top_p=st.top_p)
+            # emit iff live and the cache has room for this token
+            can = st.active & (st.pos + 1 < self.max_seq)
+            hit_cap = st.active & ~can
+            budget = jnp.where(can, st.budget - 1,
+                               jnp.where(hit_cap, 0, st.budget))
+            active = can & (budget > 0)
+            if self.eos_id is not None:
+                active &= nxt != self.eos_id
+            st = dataclasses.replace(
+                st,
+                pos=st.pos + can.astype(jnp.int32),
+                budget=budget,
+                last_tok=jnp.where(can, nxt, st.last_tok),
+                active=active,
+                key=key,
+                caches=new_caches)
+            return st, (nxt, can)
+
+        state, (toks, valid) = jax.lax.scan(
+            step, state, None, length=self.decode_chunk)
+        return state, toks, valid  # toks/valid: [N, B]
+
+    # -- host loop (chunk boundaries only) ----------------------------------
     def submit(self, req: Request):
         req.output = []
         self.queue.put(req)
 
-    def _admit(self):
+    def _admit_one(self, i: int, req: Request):
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if prompt.size > self.max_seq:
+            keep = max(1, self.max_seq - req.max_new_tokens)
+            prompt = prompt[-keep:]
+        plen = int(prompt.size)
+
+        # chunked prefill of prompt[:-1] into a zeroed batch-1 slot view;
+        # the last token is fed to the first decode step instead
+        c = self.prefill_chunk
+        slot_caches = self._zero_slot
+        for j in range(0, plen - 1, c):
+            vl = min(c, plen - 1 - j)
+            buf = np.zeros((1, c), np.int32)
+            buf[0, :vl] = prompt[j:j + vl]
+            slot_caches = self._prefill(
+                self.params, slot_caches, jnp.asarray(buf),
+                np.int32(j), np.int32(vl))
+            self.prefill_dispatches += 1
+
+        st = self.state
+        live = req.max_new_tokens > 0
+        self.state = dataclasses.replace(
+            st,
+            pos=st.pos.at[i].set(plen - 1),
+            budget=st.budget.at[i].set(req.max_new_tokens),
+            last_tok=st.last_tok.at[i].set(int(prompt[-1])),
+            active=st.active.at[i].set(live),
+            temperature=st.temperature.at[i].set(float(req.temperature)),
+            top_k=st.top_k.at[i].set(int(req.top_k)),
+            top_p=st.top_p.at[i].set(float(req.top_p)),
+            caches=self._merge(st.caches, slot_caches, np.int32(i)))
+        if live:
+            self.slots[i] = req
+        else:
+            req.done = True  # nothing to generate
+
+    def _admit(self) -> int:
+        n = 0
         for i in range(self.max_batch):
             if self.slots[i] is None and not self.queue.empty():
-                req = self.queue.get()
-                plen = 1 << max(3, (len(req.prompt) - 1).bit_length())
-                plen = min(plen, self.max_seq)
-                toks = np.zeros(plen, np.int32)
-                toks[-len(req.prompt):] = req.prompt  # left-pad bucket
-                logits, self.caches = self._prefill(
-                    self.params, self.caches, jnp.asarray(toks), i, plen=plen)
-                self.slots[i] = req
-                self.pos[i] = plen
-                self.budget[i] = req.max_new_tokens
-                tok = int(np.argmax(np.asarray(logits)))
-                req.output.append(tok)
-                self.last_tok[i] = tok
-                self.budget[i] -= 1
+                self._admit_one(i, self.queue.get())
+                n += 1
+        return n
 
-    def step(self):
-        """One continuous-batching tick: admit, decode, retire."""
-        self._admit()
-        active = [i for i, r in enumerate(self.slots) if r is not None]
-        if not active:
-            return False
-        self.key, sub = jax.random.split(self.key)
-        toks = jnp.asarray(self.last_tok[:, None])
-        nxt, self.caches = self._decode(self.params, self.caches, toks,
-                                        jnp.asarray(self.pos), sub)
-        nxt = np.asarray(nxt)
-        for i in active:
-            if self.pos[i] + 1 >= self.max_seq:
-                self.budget[i] = 0
-            else:
-                self.slots[i].output.append(int(nxt[i]))
-                self.last_tok[i] = nxt[i]
-                self.pos[i] += 1
-                self.budget[i] -= 1
-            if self.budget[i] <= 0:
+    def step(self) -> bool:
+        """One chunk cycle: admit, decode N tokens/slot, retire."""
+        admitted = self._admit()
+        occupied = [i for i, r in enumerate(self.slots) if r is not None]
+        if not occupied:
+            return admitted > 0
+        t0 = time.perf_counter()
+        self.state, toks, valid = self._decode(self.params, self.state)
+        toks, valid, alive = jax.device_get(
+            (toks, valid, self.state.active))  # THE once-per-chunk sync
+        self.decode_syncs += 1
+        self.chunk_latencies.append(time.perf_counter() - t0)
+        for n in range(toks.shape[0]):
+            for i in occupied:
+                if valid[n, i]:
+                    self.slots[i].output.append(int(toks[n, i]))
+                    self.decode_tokens += 1
+        for i in occupied:
+            if not alive[i]:
                 self.slots[i].done = True
-                self.slots[i] = None  # retire -> slot refillable next tick
+                self.slots[i] = None  # retire -> refillable next boundary
         return True
 
     def run_to_completion(self, max_ticks: int = 10000):
@@ -144,3 +283,20 @@ class ServingEngine:
             if ticks > max_ticks:
                 raise RuntimeError("serving did not converge")
         return ticks
+
+    # -- observability ------------------------------------------------------
+    def stats(self) -> dict:
+        lat = sorted(self.chunk_latencies)
+        pct = (lambda p: lat[min(len(lat) - 1, int(p * len(lat)))]
+               if lat else 0.0)
+        toks = max(1, self.decode_tokens)
+        return {
+            "decode_chunk": self.decode_chunk,
+            "prefill_chunk": self.prefill_chunk,
+            "decode_syncs": self.decode_syncs,
+            "decode_tokens": self.decode_tokens,
+            "host_syncs_per_token": self.decode_syncs / toks,
+            "prefill_dispatches": self.prefill_dispatches,
+            "p50_chunk_ms": pct(0.50) * 1e3,
+            "p95_chunk_ms": pct(0.95) * 1e3,
+        }

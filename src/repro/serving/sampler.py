@@ -1,4 +1,20 @@
-"""Token samplers: greedy / temperature / top-k / top-p, jit-friendly."""
+"""Token samplers: greedy / temperature / top-k / top-p, jit-friendly.
+
+Two entry modes through one function:
+
+  * static python scalars — the historical path: ``temperature <= 0`` short-
+    circuits to argmax at trace time (no sort, no PRNG use), top-k/top-p are
+    applied only when enabled.  This is what single-request callers and the
+    greedy decode fast path use.
+  * array-valued per-slot params — ``temperature``/``top_k``/``top_p`` may be
+    [B] arrays (or traced scalars), one entry per batch slot.  Every slot is
+    masked independently inside one jitted program: the continuous-batching
+    engine runs a pool where each request carries its own sampling config,
+    so the decode scan cannot branch on python values.  Disabled knobs use
+    the same sentinels as the scalar path: ``temperature <= 0`` means greedy
+    for that slot, ``top_k == 0`` means no top-k, ``top_p >= 1`` means no
+    nucleus cut.
+"""
 
 from __future__ import annotations
 
@@ -6,12 +22,15 @@ import jax
 import jax.numpy as jnp
 
 
-def sample(key, logits, *, temperature: float = 0.0, top_k: int = 0,
-           top_p: float = 1.0):
-    """logits [B, V] -> tokens [B]."""
+def _static_scalars(*vals) -> bool:
+    return all(isinstance(v, (int, float)) for v in vals)
+
+
+def _sample_static(key, lf, temperature, top_k, top_p):
+    """Historical scalar path (trace-time branching)."""
     if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    lf = logits.astype(jnp.float32) / temperature
+        return jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    lf = lf / temperature
     if top_k:
         kth = jax.lax.top_k(lf, top_k)[0][..., -1:]
         lf = jnp.where(lf < kth, -jnp.inf, lf)
@@ -23,3 +42,46 @@ def sample(key, logits, *, temperature: float = 0.0, top_k: int = 0,
         cutoff = jnp.take_along_axis(sorted_lf, cutoff_idx, axis=-1)
         lf = jnp.where(lf < cutoff, -jnp.inf, lf)
     return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+
+
+def sample(key, logits, *, temperature=0.0, top_k=0, top_p=1.0):
+    """logits [B, V] -> tokens [B].
+
+    ``temperature``/``top_k``/``top_p`` are python scalars (static path) or
+    [B] arrays / traced scalars (vectorized per-slot path, see module doc).
+    """
+    lf = logits.astype(jnp.float32)
+    if _static_scalars(temperature, top_k, top_p):
+        return _sample_static(key, lf, temperature, top_k, top_p)
+
+    b, v = lf.shape
+    temp = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (b,))
+    tk = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (b,))
+    tp = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (b,))
+
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    # temperature scale (guard the greedy slots against /0; their sampled
+    # value is discarded by the final select)
+    x = lf / jnp.where(temp > 0.0, temp, 1.0)[:, None]
+
+    # per-slot top-k: kth-highest value per row via a full descending sort
+    # (lax.top_k needs a static k). top_k == 0 disables (k -> V).
+    k_eff = jnp.clip(jnp.where(tk > 0, tk, v), 1, v)
+    x_desc = jnp.sort(x, axis=-1)[..., ::-1]
+    kth = jnp.take_along_axis(x_desc, (k_eff - 1)[:, None], axis=-1)
+    x = jnp.where(x < kth, -jnp.inf, x)
+
+    # per-slot top-p on the top-k-masked logits (masked entries carry zero
+    # probability mass, matching the scalar path's apply order). No second
+    # sort: the masked entries are exactly the tail of x_desc, so the sorted
+    # masked array is x_desc with positions >= n_kept set to -inf.
+    n_kept = jnp.sum(x_desc >= kth, axis=-1, keepdims=True)
+    x_desc = jnp.where(jnp.arange(v)[None, :] < n_kept, x_desc, -jnp.inf)
+    probs = jax.nn.softmax(x_desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    cutoff_idx = jnp.clip(jnp.sum(cum < tp[:, None], axis=-1), 0, v - 1)
+    cutoff = jnp.take_along_axis(x_desc, cutoff_idx[:, None], axis=-1)
+    x = jnp.where((x < cutoff) & (tp[:, None] < 1.0), -jnp.inf, x)
+
+    sampled = jax.random.categorical(key, x, axis=-1).astype(jnp.int32)
+    return jnp.where(temp <= 0.0, greedy, sampled)
