@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: install test test-fast bench-smoke bench-serving
+.PHONY: install test test-fast bench-smoke bench-serving bench-autotune
 
 install:
 	$(PYTHON) -m pip install -r requirements.txt
@@ -14,7 +14,9 @@ test:            ## tier-1 verify: the full suite, fail-fast
 
 test-fast:       ## kernel + core contracts only (minutes, not tens of)
 	$(PYTHON) -m pytest -x -q tests/test_kernels.py tests/test_fused_mpgemm.py \
-	    tests/test_lmma_dse.py tests/test_core_properties.py
+	    tests/test_lmma_dse.py tests/test_core_properties.py \
+	    tests/test_autotune.py tests/test_autotune_properties.py \
+	    tests/test_latency_regression.py
 
 bench-smoke:     ## quick analytic benchmark pass (no kernels executed)
 	$(PYTHON) benchmarks/bench_fused_mpgemm.py --smoke
@@ -22,3 +24,7 @@ bench-smoke:     ## quick analytic benchmark pass (no kernels executed)
 
 bench-serving:   ## serving-engine perf (chunked vs per-tick decode) -> JSON
 	$(PYTHON) benchmarks/bench_serving.py --out BENCH_serving.json
+
+bench-autotune:  ## measured-time kernel tuner vs LMMA heuristic -> JSON
+	$(PYTHON) benchmarks/bench_autotune.py --cache .tuning_cache.json \
+		--out BENCH_autotune.json

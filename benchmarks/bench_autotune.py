@@ -1,0 +1,183 @@
+"""Kernel-autotuner benchmark: measured dispatch vs the LMMA heuristic.
+
+For a sweep of decode/prefill-shaped mpGEMM problems this bench runs the
+measured-time tuner (``core.autotune``) and reports, per shape:
+
+  * ``heuristic_ms`` — steady-state time of the config ``fusion="auto"``
+    would dispatch (always candidate 0 of the tuner's search space);
+  * ``tuned_ms`` / ``speedup`` — steady-state of the measured winner. The
+    heuristic is itself a candidate, so ``tuned_ms <= heuristic_ms`` within
+    one measurement pass — the tuner can only match or beat the prior;
+  * per-candidate ``compile_ms`` vs ``steady_ms`` — the split that tells a
+    compile-churn problem from a genuinely bad tile (the decode_chunk=16
+    post-mortem in docs/KERNEL_TUNING.md is exactly this distinction);
+  * cache economics — entries resolved from the persistent cache skip
+    measurement entirely; ``hit_selection_ms`` is the trace-time cost of a
+    cache-hit dispatch decision (target: well under 1 ms).
+
+Run twice with the same ``--cache`` to see the second run resolve every
+shape from disk (``--expect-hits`` turns that into a hard assertion — the
+CI smoke job does exactly that):
+
+    PYTHONPATH=src python benchmarks/bench_autotune.py --smoke --cache /tmp/tc.json
+    PYTHONPATH=src python benchmarks/bench_autotune.py --smoke --cache /tmp/tc.json \
+        --expect-hits
+    PYTHONPATH=src python benchmarks/bench_autotune.py --out BENCH_autotune.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import autotune
+from repro.core.quantize import quantize
+
+# (m, n, k): decode GEMVs (m = max_batch) through prefill-chunk shapes
+# (m = chunk length), n/k spanning head-proj to lm-head aspect ratios
+SHAPES = [
+    (4, 512, 64),     # reduced-tinyllama lm_head at max_batch=4 decode
+    (4, 256, 128),    # wide-K projection, decode
+    (8, 512, 256),    # decode at max_batch=8
+    (16, 512, 64),    # prefill chunk 16 through the lm_head shape
+    (64, 1024, 256),  # long prefill chunk, elongated-N regime
+]
+SMOKE_SHAPES = SHAPES[:2]
+
+
+def tune_shape(m, n, k, *, bits, k_group, cache, repeats, max_candidates):
+    w = jax.random.normal(jax.random.key(n * 31 + k), (n, k))
+    qw = quantize(w, bits, k_group=k_group)
+    key = autotune.shape_key(m, qw.n, qw.g, qw.k_group, qw.num_planes)
+
+    t0 = time.perf_counter()
+    cached = cache.lookup(key)
+    sel_ms = (time.perf_counter() - t0) * 1e3
+    if cached is not None:
+        return {
+            "m": m, "n": n, "k": k, "key": key, "cache": "hit",
+            "hit_selection_ms": sel_ms,
+            "heuristic_ms": cached.heuristic_ms,
+            "tuned_ms": cached.steady_ms,
+            "speedup": cached.heuristic_ms / max(cached.steady_ms, 1e-9),
+            "best": cached.as_dict(),
+        }
+
+    t0 = time.perf_counter()
+    best, measured = autotune.tune_mpgemm(
+        m, qw, cache=cache, repeats=repeats, max_candidates=max_candidates)
+    tune_s = time.perf_counter() - t0
+    heur = next(c for c in measured if c.source == "heuristic")
+    return {
+        "m": m, "n": n, "k": k, "key": key, "cache": "miss",
+        "tune_s": tune_s,
+        "heuristic_ms": heur.steady_ms,
+        "tuned_ms": best.steady_ms,
+        "speedup": heur.steady_ms / max(best.steady_ms, 1e-9),
+        "best": best.as_dict(),
+        "candidates": [dataclasses.asdict(c) for c in measured],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cache", default=".tuning_cache.json",
+                    help="persistent tuning cache (JSON) to read/update")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shape budget (2 shapes, fewer candidates)")
+    ap.add_argument("--bits", type=int, default=2)
+    ap.add_argument("--k-group", type=int, default=4)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--max-candidates", type=int, default=6)
+    ap.add_argument("--expect-hits", action="store_true",
+                    help="fail unless every shape resolves from the cache "
+                         "(CI second-run assertion)")
+    ap.add_argument("--out", default=None, help="write JSON here")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.repeats = min(args.repeats, 2)
+        args.max_candidates = min(args.max_candidates, 4)
+
+    shapes = SMOKE_SHAPES if args.smoke else SHAPES
+    cache = autotune.TuningCache(args.cache)
+    preloaded = len(cache)
+
+    rows = []
+    for m, n, k in shapes:
+        r = tune_shape(m, n, k, bits=args.bits, k_group=args.k_group,
+                       cache=cache, repeats=args.repeats,
+                       max_candidates=args.max_candidates)
+        rows.append(r)
+        if r["cache"] == "hit":
+            print(f"[{m:>3}x{n:<5}k{k:<4}] cache HIT   "
+                  f"selection {r['hit_selection_ms']:.3f} ms  "
+                  f"steady {r['tuned_ms']:.2f} ms "
+                  f"({r['best']['fusion']} bm={r['best']['block_m']} "
+                  f"bn={r['best']['block_n']} bg={r['best']['block_g']})")
+        else:
+            print(f"[{m:>3}x{n:<5}k{k:<4}] tuned in {r['tune_s']:.1f}s: "
+                  f"heuristic {r['heuristic_ms']:.2f} ms -> "
+                  f"tuned {r['tuned_ms']:.2f} ms "
+                  f"({r['speedup']:.2f}x, {r['best']['fusion']} "
+                  f"bm={r['best']['block_m']} bn={r['best']['block_n']} "
+                  f"bg={r['best']['block_g']})")
+
+    cache.save()
+    hits = sum(1 for r in rows if r["cache"] == "hit")
+    misses = len(rows) - hits
+    if args.expect_hits and misses:
+        raise SystemExit(f"--expect-hits: {misses} shapes missed the cache "
+                         f"{args.cache!r}")
+
+    # second-run simulation: reload the persisted cache cold and time the
+    # dispatch-decision lookup for every swept shape (what fusion="tuned"
+    # pays at trace time once the cache is warm)
+    fresh = autotune.TuningCache(args.cache)
+    for r in rows:
+        t0 = time.perf_counter()
+        hit = fresh.lookup(r["key"])
+        r["hit_selection_ms"] = (time.perf_counter() - t0) * 1e3
+        r["persisted"] = hit is not None
+
+    result = {
+        "bench": "autotune",
+        "backend": cache.backend,
+        "jax_version": cache.jax_version,
+        "bits": args.bits,
+        "k_group": args.k_group,
+        "repeats": args.repeats,
+        "max_candidates": args.max_candidates,
+        "cache_path": args.cache,
+        "cache_entries_before": preloaded,
+        "cache_entries_after": len(cache),
+        "cache_hits": hits,
+        "cache_misses": misses,
+        "shapes": rows,
+    }
+    tuned_rows = [r for r in rows if r["cache"] == "miss"]
+    if tuned_rows:
+        result["min_speedup"] = min(r["speedup"] for r in tuned_rows)
+        result["mean_speedup"] = float(np.mean([r["speedup"]
+                                                for r in tuned_rows]))
+        print(f"tuned >= heuristic on {len(tuned_rows)}/{len(tuned_rows)} "
+              f"tuned shapes (min {result['min_speedup']:.2f}x, "
+              f"mean {result['mean_speedup']:.2f}x)")
+    result["second_run_all_hits"] = all(r["persisted"] for r in rows)
+    result["hit_selection_ms_max"] = max(r["hit_selection_ms"] for r in rows)
+    print(f"second-run cache hit on {sum(r['persisted'] for r in rows)}"
+          f"/{len(rows)} shapes, selection max "
+          f"{result['hit_selection_ms_max']:.3f} ms")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,10 +7,15 @@ This bench runs the SAME request workload through the engine at a sweep of
 ``decode_chunk`` settings (1 = the historical one-dispatch-per-token loop)
 and reports, per setting:
 
-  * tok/s over the whole run (prefill + decode wall-clock),
+  * tok/s over the whole run (prefill + decode wall-clock) plus a
+    decode-only tok/s that excludes prefill/admission overhead,
+  * ``compile_ms`` — the AOT compile cost of the decode program for that
+    chunk shape, measured separately so compile churn can never masquerade
+    as a steady-state latency cliff (see docs/KERNEL_TUNING.md),
   * host syncs per generated token (measured from engine counters; the
     device-resident loop targets <= 1/decode_chunk),
-  * p50/p95 decode-chunk dispatch latency.
+  * p50/p95 decode-chunk dispatch latency (best of ``--repeats`` measured
+    reps on one warmed engine).
 
 Results go to stdout and, with ``--out``, to a JSON file so the perf
 trajectory is machine-readable (``make bench-serving`` writes
@@ -51,27 +56,44 @@ def run_one(cfg, params, *, decode_chunk, args):
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,
                         max_seq=args.max_seq, decode_chunk=decode_chunk,
                         prefill_chunk=args.prefill_chunk)
-    # warmup: compile decode/prefill/merge off the clock
+
+    # Attribute XLA compile time for this chunk shape explicitly (AOT
+    # lower+compile; never lands on the measured clock). Telling compile
+    # from steady-state is the whole decode_chunk=16 post-mortem: a chunk
+    # sweep that recompiles inside the measured window reports a latency
+    # cliff that has nothing to do with the kernel schedule.
+    t0 = time.perf_counter()
+    eng._decode.lower(eng.params, eng.state).compile()
+    compile_ms = (time.perf_counter() - t0) * 1e3
+
+    # warmup: populate the jit dispatch cache for decode/prefill/merge
     for r in _requests(cfg, args.max_batch, 2, seed=1):
         eng.submit(r)
     eng.run_to_completion()
-    eng.reset()
 
-    for r in _requests(cfg, args.requests, args.max_new, seed=0):
-        eng.submit(r)
-    t0 = time.perf_counter()
-    eng.run_to_completion()
-    wall = time.perf_counter() - t0
-
-    st = eng.stats()
-    st.update({
-        "wall_s": wall,
-        "tok_s": st["decode_tokens"] / wall,
-        "sync_bound": 1.0 / decode_chunk,
-        "meets_sync_bound":
-            st["host_syncs_per_token"] <= 1.0 / decode_chunk + 1e-12,
-    })
-    return st
+    # steady state: repeat the measured workload on the SAME engine (no
+    # recompiles between reps) and keep the best rep — isolates kernel
+    # throughput from scheduler/allocator noise on a shared host.
+    best = None
+    for _ in range(max(1, args.repeats)):
+        eng.reset()
+        for r in _requests(cfg, args.requests, args.max_new, seed=0):
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run_to_completion()
+        wall = time.perf_counter() - t0
+        st = eng.stats()
+        st.update({
+            "wall_s": wall,
+            "tok_s": st["decode_tokens"] / wall,
+            "compile_ms": compile_ms,
+            "sync_bound": 1.0 / decode_chunk,
+            "meets_sync_bound":
+                st["host_syncs_per_token"] <= 1.0 / decode_chunk + 1e-12,
+        })
+        if best is None or st["tok_s"] > best["tok_s"]:
+            best = st
+    return best
 
 
 def main(argv=None):
@@ -91,6 +113,9 @@ def main(argv=None):
                          "per-tick baseline")
     ap.add_argument("--mode", default="lut_xla")
     ap.add_argument("--weight-bits", type=int, default=2)
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="measured reps per chunk setting on one warmed "
+                         "engine; best rep is reported")
     ap.add_argument("--out", default=None, help="write JSON here")
     args = ap.parse_args(argv)
     if args.smoke:
@@ -107,12 +132,14 @@ def main(argv=None):
     for dc in chunks:
         st = run_one(cfg, params, decode_chunk=dc, args=args)
         runs.append(st)
-        print(f"decode_chunk={dc:>3}: {st['tok_s']:8.1f} tok/s  "
+        print(f"decode_chunk={dc:>3}: {st['tok_s']:8.1f} tok/s "
+              f"(decode-only {st['decode_tok_s']:8.1f})  "
               f"syncs/tok {st['host_syncs_per_token']:.4f} "
               f"(bound {st['sync_bound']:.4f}, "
               f"{'OK' if st['meets_sync_bound'] else 'VIOLATED'})  "
               f"chunk p50 {st['p50_chunk_ms']:.1f} ms "
-              f"p95 {st['p95_chunk_ms']:.1f} ms")
+              f"p95 {st['p95_chunk_ms']:.1f} ms  "
+              f"compile {st['compile_ms']:.0f} ms")
 
     result = {
         "bench": "serving",

@@ -74,7 +74,7 @@ class ArchConfig:
     attn_chunk: int = 1024
     # the paper's technique: quant config dict or None
     #   {"qat": bool, "weight_bits", "scheme", "mpgemm_mode", "table_quant",
-    #    "k_group", "fusion"}  — fusion ∈ {"auto","fused","staged"} picks the
+    #    "k_group", "fusion"}  — fusion ∈ {"auto","fused","staged","tuned"} picks the
     #   lut_pallas precompute placement (fused = table built in-VMEM, §3.1.1)
     quant: Optional[dict] = None
     notes: str = ""

@@ -38,8 +38,10 @@ __all__ = ["mpgemm", "precompute_tables", "MPGEMM_MODES", "FUSION_MODES"]
 
 MPGEMM_MODES = ("fp16", "dequant", "lut_xla", "lut_pallas")
 # lut_pallas precompute placement (owned here, next to the mode it modifies,
-# so config/model validation never has to import the kernel stack)
-FUSION_MODES = ("auto", "fused", "staged")
+# so config/model validation never has to import the kernel stack):
+# "auto" = LMMA VMEM heuristic, "tuned" = measured-time autotune cache
+# (core.autotune; falls back to "auto" on a cache miss)
+FUSION_MODES = ("auto", "fused", "staged", "tuned")
 
 
 def precompute_tables(x, k_group: int = 4, table_quant: Optional[str] = "per_row") -> Table:
@@ -80,8 +82,9 @@ def mpgemm(
     ``fusion`` (lut_pallas only) picks the precompute placement: "fused"
     computes the table in-VMEM inside the mpGEMM kernel (never hits HBM),
     "staged" materializes it between two kernels, "auto" lets the LMMA tile
-    scheduler decide from the VMEM budget. Ignored when ``table=`` is
-    supplied — a shared table is by definition staged.
+    scheduler decide from the VMEM budget, "tuned" uses the persistent
+    measured-time autotune cache (auto on a miss). Ignored when ``table=``
+    is supplied — a shared table is by definition staged.
     """
     if mode not in MPGEMM_MODES:
         raise ValueError(f"mode {mode!r} not in {MPGEMM_MODES}")

@@ -13,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.core import table as table_mod
 from repro.core.lmma import (LMMADescriptor, TileSchedule, schedule_tiles,
                              select_fusion)
@@ -27,7 +28,8 @@ from repro.kernels.table_precompute import table_precompute_pallas
 from repro.core.mpgemm import FUSION_MODES
 
 __all__ = ["table_precompute", "lut_mpgemm", "fused_lut_mpgemm",
-           "dequant_mpgemm", "pick_blocks", "auto_fusion", "FUSION_MODES"]
+           "dequant_mpgemm", "pick_blocks", "auto_fusion", "resolve_dispatch",
+           "FUSION_MODES"]
 
 
 def _pad_to(x, mult, axis):
@@ -94,6 +96,40 @@ def auto_fusion(m, n, g, k_group, planes,
     desc = LMMADescriptor(m=m, n=n, k=g * k_group, w_bits=planes,
                           k_group=k_group)
     return select_fusion(desc, TileSchedule(bm, bn, bg, 0, 0, 0, 0))
+
+
+def resolve_dispatch(m, n, g, k_group, planes, *, fusion="auto",
+                     block_m=None, block_n=None, block_g=None,
+                     table_quant: Optional[str] = "per_row"):
+    """Trace-time dispatch decision for one mpGEMM shape.
+
+    Returns the fully-resolved ``(fusion, bm, bn, bg)`` the wrappers will
+    run — the single source of truth shared by ``lut_mpgemm`` and the
+    round-trip tests. Policies:
+
+      * ``"tuned"``  — consult the active autotune cache (core.autotune);
+        a hit supplies the measured fusion and fills any block knob the
+        caller left unset (caller-pinned blocks always win); a miss — no
+        active cache, shape never tuned, or the entry failed sanitation —
+        degrades to ``"auto"``.
+      * ``"auto"``   — clamp blocks, then the LMMA VMEM-fit heuristic.
+      * ``"fused"``/``"staged"`` — forced, blocks clamped as usual.
+    """
+    if fusion == "tuned":
+        tc = autotune.lookup_tuned(m, n, g, k_group, planes,
+                                   table_quant=table_quant)
+        if tc is not None:
+            fusion = tc.fusion
+            block_m = block_m or tc.block_m
+            block_n = block_n or tc.block_n
+            block_g = block_g or tc.block_g
+        else:
+            fusion = "auto"
+    bm, bn, bg = _clamp_blocks(m, n, g, k_group, planes,
+                               block_m, block_n, block_g)
+    if fusion == "auto":
+        fusion = auto_fusion(m, n, g, k_group, planes, bm, bn, bg)
+    return fusion, bm, bn, bg
 
 
 def _padded_row_scale(a: jax.Array, g: int, k_group: int, bm: int):
@@ -202,24 +238,24 @@ def lut_mpgemm(x: jax.Array, qw: QuantizedWeight, *,
     ``table_precompute_pallas`` then ``lut_mpgemm_pallas`` with the table
     round-tripping through HBM; "auto" defers to the LMMA scheduler
     (``core.lmma.select_fusion``), which picks fused whenever the fused
-    working set fits the VMEM budget. A caller-supplied ``table=`` (the
-    cross-consumer amortization of §3.1.1) always implies staged — the
-    table already exists.
+    working set fits the VMEM budget; "tuned" consults the persistent
+    measured-time autotune cache (``core.autotune``) and falls back to
+    "auto" on a miss. A caller-supplied ``table=`` (the cross-consumer
+    amortization of §3.1.1) always implies staged — the table already
+    exists.
     """
     if fusion not in FUSION_MODES:
         raise ValueError(f"fusion {fusion!r} not in {FUSION_MODES}")
     m = x.shape[0]
     g, e = qw.g, 1 << (qw.k_group - 1)
     planes = qw.num_planes
-    bm, bn, bg = _clamp_blocks(m, qw.n, g, qw.k_group, planes,
-                               block_m, block_n, block_g)
-    if table is None and fusion != "staged":
-        if fusion == "auto":
-            fusion = auto_fusion(m, qw.n, g, qw.k_group, planes, bm, bn, bg)
-        if fusion == "fused":
-            return fused_lut_mpgemm(
-                x, qw, table_quant=table_quant, block_m=bm, block_n=bn,
-                block_g=bg, interpret=interpret)
+    fusion, bm, bn, bg = resolve_dispatch(
+        m, qw.n, g, qw.k_group, planes, fusion=fusion, block_m=block_m,
+        block_n=block_n, block_g=block_g, table_quant=table_quant)
+    if table is None and fusion == "fused":
+        return fused_lut_mpgemm(
+            x, qw, table_quant=table_quant, block_m=bm, block_n=bn,
+            block_g=bg, interpret=interpret)
     if table is None:
         table = table_precompute(x, qw.k_group, table_quant,
                                  block_m=min(64, bm), interpret=interpret)

@@ -48,7 +48,16 @@ def main(argv=None):
     ap.add_argument("--fusion", default="auto",
                     choices=list(FUSION_MODES),
                     help="lut_pallas precompute placement: fused keeps the "
-                         "table in VMEM, staged round-trips it through HBM")
+                         "table in VMEM, staged round-trips it through HBM, "
+                         "tuned reads the measured autotune cache")
+    ap.add_argument("--tuning-cache", default=None, metavar="PATH",
+                    help="persistent kernel-tuning cache (JSON). Activates "
+                         "measured dispatch for fusion=tuned; created/"
+                         "updated by --pretune")
+    ap.add_argument("--pretune", action="store_true",
+                    help="before serving, measure-tune every mpGEMM shape "
+                         "this engine dispatches and persist the cache "
+                         "(lut_pallas only)")
     ap.add_argument("--weight-bits", type=int, default=2)
     args = ap.parse_args(argv)
 
@@ -65,11 +74,23 @@ def main(argv=None):
     if not quantized:
         cfg = cfg.replace(quant=None)
 
+    if args.fusion == "tuned" and args.tuning_cache is None and not args.pretune:
+        print("note: fusion=tuned without --tuning-cache falls back to the "
+              "auto heuristic on every dispatch")
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,
                         max_seq=args.max_seq,
                         decode_chunk=args.decode_chunk,
                         prefill_chunk=args.prefill_chunk,
-                        eos_id=args.eos_id)
+                        eos_id=args.eos_id,
+                        tuning_cache=args.tuning_cache)
+    if args.pretune:
+        if eng.tuning_cache is None:  # tune in-memory for this process
+            from repro.core import autotune
+            eng.tuning_cache = autotune.configure(None)
+        t0 = time.time()
+        n = eng.pretune(verbose=True)
+        print(f"pretuned {n} mpGEMM shapes in {time.time() - t0:.1f}s "
+              f"-> {args.tuning_cache or '(in-memory only)'}")
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(rng.integers(4, 24))

@@ -108,15 +108,23 @@ def resolve_fusion(m: int, k: int, quant: dict) -> str:
     per-call dispatch uses) with one approximation: N differs per consumer,
     so the decision uses the scheduler's maximum elongation (n=2048) —
     ``fused_tile_bytes`` only grows with bn, so fused fitting there implies
-    it fits for every real consumer with the same clamped bm/bg.
+    it fits for every real consumer with the same clamped bm/bg. With
+    ``fusion="tuned"`` the autotune cache votes first (largest-N entry
+    matching this activation shape); a miss falls back to the heuristic.
     """
     fusion = quant.get("fusion", "auto")
-    if fusion != "auto":
+    if fusion not in ("auto", "tuned"):
         return fusion
-    from repro.kernels.ops import auto_fusion
     kg = quant.get("k_group", 4)
-    return auto_fusion(m, 2048, max(1, k // kg), kg,
-                       quant.get("weight_bits", 2))
+    bits = quant.get("weight_bits", 2)
+    if fusion == "tuned":
+        from repro.core.autotune import lookup_fusion_any
+        tuned = lookup_fusion_any(m, max(1, k // kg), kg, bits)
+        if tuned is not None:
+            return tuned
+        # miss: no active cache or shape untuned — same fallback as ops
+    from repro.kernels.ops import auto_fusion
+    return auto_fusion(m, 2048, max(1, k // kg), kg, bits)
 
 
 def make_table(x: jax.Array, quant: Optional[dict]):

@@ -67,8 +67,9 @@ def _expert_ffn(w, x, quant):
         kg = (quant or {}).get("k_group", 4)
         fusion = (quant or {}).get("fusion", "auto")
         # fused lut_pallas rebuilds tables in-VMEM — sharing one via HBM
-        # would force the staged path; resolve auto the same way layers do
-        # (x is [E, C, D]: per-expert tables are [C, D]-shaped)
+        # would force the staged path; resolve auto/tuned the same way
+        # layers do (tuned consults the autotune cache, heuristic on miss;
+        # x is [E, C, D]: per-expert tables are [C, D]-shaped)
         share = mode == "lut_xla" or (
             mode == "lut_pallas"
             and L.resolve_fusion(x.shape[1], x.shape[2], quant or {})

@@ -49,6 +49,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import time
+import warnings
 from typing import Any, List, Optional
 
 import jax
@@ -102,7 +103,8 @@ jax.tree_util.register_dataclass(
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
                  max_seq: int = 512, seed: int = 0, decode_chunk: int = 8,
-                 prefill_chunk: int = 32, eos_id: Optional[int] = None):
+                 prefill_chunk: int = 32, eos_id: Optional[int] = None,
+                 tuning_cache: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -113,6 +115,14 @@ class ServingEngine:
         self._seed = seed
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self.slots: List[Optional[Request]] = [None] * max_batch
+
+        # persistent kernel-tuning cache: activates fusion="tuned" lookups
+        # for every mpGEMM dispatched by this engine's jitted programs
+        # (trace-time dict hits; populate via pretune() or bench_autotune)
+        self.tuning_cache = None
+        if tuning_cache is not None:
+            from repro.core import autotune
+            self.tuning_cache = autotune.configure(tuning_cache)
 
         # per-leaf batch axes of the cache pytree (shape-diff discovery:
         # hybrid stacks carry batch at axis 2, plain stacks at axis 1)
@@ -126,7 +136,12 @@ class ServingEngine:
         # next occupant — SSM states are cumulative)
         self._zero_slot = api.init_cache(cfg, 1, max_seq, dtype=jnp.float32)
 
-        self._decode = jax.jit(self._decode_chunk_impl)
+        # the decode carry (caches dominate it) is donated: without donation
+        # every chunk dispatch copies the full [B, S] cache pytree just to
+        # write the new state next to it — pure memory traffic that grows
+        # with max_batch·max_seq and was a visible slice of per-chunk
+        # latency at large decode_chunk settings
+        self._decode = jax.jit(self._decode_chunk_impl, donate_argnums=(1,))
         self._prefill = jax.jit(self._prefill_chunk_impl)
         self._merge = jax.jit(
             lambda caches, slot, i: kvcache.merge_batch(
@@ -284,12 +299,44 @@ class ServingEngine:
                 raise RuntimeError("serving did not converge")
         return ticks
 
+    # -- kernel autotuning --------------------------------------------------
+    def pretune(self, *, repeats: int = 2, max_candidates: int = 4,
+                verbose: bool = False) -> int:
+        """Measure-tune every mpGEMM shape this engine dispatches.
+
+        Decode steps run M = max_batch activations per projection; prefill
+        chunks run M = prefill_chunk. Tunes each (M, packed-weight shape)
+        pair missing from the tuning cache and persists the cache, so a
+        subsequent trace with ``fusion="tuned"`` resolves every dispatch
+        from measured data (trace-time dict hit, sub-ms). Only meaningful
+        for ``mpgemm_mode="lut_pallas"`` — the other modes have no block
+        knobs to tune.
+        """
+        from repro.core import autotune
+        cache = self.tuning_cache or autotune.get_active()
+        if cache is None:
+            raise ValueError("pretune() needs a tuning cache — construct "
+                             "the engine with tuning_cache=<path>")
+        q = self.cfg.quant or {}
+        if q.get("mpgemm_mode") != "lut_pallas":
+            warnings.warn("pretune() is a no-op for mpgemm_mode="
+                          f"{q.get('mpgemm_mode')!r} (no kernel knobs)")
+            return 0
+        n = autotune.pretune_params(
+            self.params, [self.max_batch, self.prefill_chunk], cache=cache,
+            table_quant=q.get("table_quant", "per_row"), repeats=repeats,
+            max_candidates=max_candidates, verbose=verbose)
+        if cache.path is not None:
+            cache.save()
+        return n
+
     # -- observability ------------------------------------------------------
     def stats(self) -> dict:
         lat = sorted(self.chunk_latencies)
         pct = (lambda p: lat[min(len(lat) - 1, int(p * len(lat)))]
                if lat else 0.0)
         toks = max(1, self.decode_tokens)
+        decode_s = sum(self.chunk_latencies)
         return {
             "decode_chunk": self.decode_chunk,
             "prefill_chunk": self.prefill_chunk,
@@ -299,4 +346,7 @@ class ServingEngine:
             "prefill_dispatches": self.prefill_dispatches,
             "p50_chunk_ms": pct(0.50) * 1e3,
             "p95_chunk_ms": pct(0.95) * 1e3,
+            # decode-only throughput: excludes prefill/admit/compile, so it
+            # is the number that isolates a decode-chunk latency cliff
+            "decode_tok_s": self.decode_tokens / decode_s if decode_s else 0.0,
         }

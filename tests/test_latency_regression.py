@@ -1,0 +1,104 @@
+"""Decode-chunk latency-regression suite: the decode_chunk=16 cliff.
+
+A historical BENCH_serving.json showed chunk=16 p50 latency at ~4.6x
+chunk=8 (15 -> 69 ms) with tok/s cut in half — a cliff the chunk sweep
+should never have: doubling the chunk doubles the work per dispatch, so
+p50 should scale ~linearly and decode-only throughput should be flat.
+The post-mortem (docs/KERNEL_TUNING.md) attributed it to compile time and
+state-copy overhead leaking into a small measured sample, not to the
+kernel schedule. This suite locks the invariant in:
+
+  * chunk=16 p50 chunk latency <= 2.5x chunk=8 (linear scaling would be
+    2.0x; the slack absorbs CPU-CI noise);
+  * chunk=16 decode-only tok/s within 25% of chunk=8.
+
+Runs on the reduced tinyllama config on CPU with relaxed bounds, best-of-2
+reps per setting on one warmed engine (compile never on the clock).
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models import api
+from repro.serving.engine import Request, ServingEngine
+
+REQUESTS = 8
+MAX_NEW = 24
+MAX_BATCH = 4
+REPS = 3
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = registry.get_reduced("tinyllama-1.1b")
+    cfg = cfg.replace(activation_dtype=jnp.float32)
+    cfg = cfg.with_quant(mpgemm_mode="lut_xla", weight_bits=2)
+    params = api.init_params(jax.random.key(0), cfg, serve_quantized=True)
+    return cfg, params
+
+
+def _requests(cfg, n, max_new, seed):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(4, 24)),
+                                        dtype=np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _run_chunk_setting(cfg, params, decode_chunk):
+    """Best-per-metric stats over REPS measured runs on one warmed engine.
+
+    Best-of aggregation (min p50, max tok/s, independently) is deliberate:
+    a structural cliff degrades every rep, while CPU-CI scheduler noise
+    rarely hits all REPS runs of both chunk settings — so the bounds stay
+    tight without flaking under a loaded host.
+    """
+    eng = ServingEngine(cfg, params, max_batch=MAX_BATCH, max_seq=64,
+                        decode_chunk=decode_chunk, prefill_chunk=16)
+    # warmup: compile decode/prefill/merge off the clock
+    for r in _requests(cfg, MAX_BATCH, 2, seed=1):
+        eng.submit(r)
+    eng.run_to_completion()
+
+    reps = []
+    for _ in range(REPS):
+        eng.reset()
+        for r in _requests(cfg, REQUESTS, MAX_NEW, seed=0):
+            eng.submit(r)
+        eng.run_to_completion()
+        reps.append(eng.stats())
+    best = dict(reps[-1])
+    best["p50_chunk_ms"] = min(r["p50_chunk_ms"] for r in reps)
+    best["decode_tok_s"] = max(r["decode_tok_s"] for r in reps)
+    return best
+
+
+def test_no_decode_chunk16_cliff(served_model):
+    cfg, params = served_model
+    st8 = _run_chunk_setting(cfg, params, 8)
+    st16 = _run_chunk_setting(cfg, params, 16)
+
+    # p50 chunk latency scales ~linearly in chunk size (2x work -> ~2x
+    # latency); the historical cliff was 4.6x. 2.5x bound = linear + noise.
+    assert st16["p50_chunk_ms"] <= 2.5 * max(st8["p50_chunk_ms"], 1.0), (
+        f"decode_chunk=16 p50 {st16['p50_chunk_ms']:.1f} ms vs "
+        f"chunk=8 {st8['p50_chunk_ms']:.1f} ms — the chunk-16 cliff is back")
+
+    # decode-only throughput must be flat across chunk sizes
+    assert st16["decode_tok_s"] >= 0.75 * st8["decode_tok_s"], (
+        f"decode_chunk=16 decode tok/s {st16['decode_tok_s']:.0f} vs "
+        f"chunk=8 {st8['decode_tok_s']:.0f} — >25% regression")
+
+
+def test_chunked_decode_sync_bound(served_model):
+    """Chunked decode must hold its host-sync contract — syncs per token
+    <= 1/decode_chunk — or the latency win is being bought back."""
+    cfg, params = served_model
+    for dc in (8, 16):
+        st = _run_chunk_setting(cfg, params, dc)
+        assert st["host_syncs_per_token"] <= 1.0 / dc + 1e-12
