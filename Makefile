@@ -16,7 +16,8 @@ test-fast:       ## kernel + core contracts only (minutes, not tens of)
 	$(PYTHON) -m pytest -x -q tests/test_kernels.py tests/test_fused_mpgemm.py \
 	    tests/test_lmma_dse.py tests/test_core_properties.py \
 	    tests/test_autotune.py tests/test_autotune_properties.py \
-	    tests/test_latency_regression.py
+	    tests/test_latency_regression.py tests/test_kvcache_paged.py \
+	    tests/test_paged_serving.py
 
 bench-smoke:     ## quick analytic benchmark pass (no kernels executed)
 	$(PYTHON) benchmarks/bench_fused_mpgemm.py --smoke

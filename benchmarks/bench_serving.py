@@ -17,6 +17,22 @@ and reports, per setting:
   * p50/p95 decode-chunk dispatch latency (best of ``--repeats`` measured
     reps on one warmed engine).
 
+Three block-paged-pool scenarios ride along (skip with ``--no-paged``):
+
+  * ``paged_compare`` — the SAME workload on the dense engine vs the paged
+    pool at equal batch: decode tok/s ratio (the paging overhead), peak
+    cache HBM bytes, slot occupancy, admission-blocked rate.
+    ``--assert-paged-ratio R`` exits nonzero if paged decode tok/s drops
+    below R x dense (CI gate).
+  * ``capacity`` — fixed cache-HBM budget: a dense engine spends
+    max_batch x max_seq whether prompts need it or not; the paged pool
+    holds the same bytes but admits by actual block need, so ragged
+    prompts pack more concurrent slots into the budget.
+  * ``prefix_fanout`` — one shared system prompt fanned out over N
+    requests with distinct suffixes: followers reuse the prefix blocks by
+    reference and skip those prefill chunks entirely (prefill wall-time
+    ratio reported).
+
 Results go to stdout and, with ``--out``, to a JSON file so the perf
 trajectory is machine-readable (``make bench-serving`` writes
 ``BENCH_serving.json``).
@@ -52,10 +68,10 @@ def _requests(cfg, n, max_new, seed=0):
     return reqs
 
 
-def run_one(cfg, params, *, decode_chunk, args):
+def run_one(cfg, params, *, decode_chunk, args, **engine_kw):
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,
                         max_seq=args.max_seq, decode_chunk=decode_chunk,
-                        prefill_chunk=args.prefill_chunk)
+                        prefill_chunk=args.prefill_chunk, **engine_kw)
 
     # Attribute XLA compile time for this chunk shape explicitly (AOT
     # lower+compile; never lands on the measured clock). Telling compile
@@ -96,6 +112,134 @@ def run_one(cfg, params, *, decode_chunk, args):
     return best
 
 
+def _warmed_engine(cfg, params, *, n_warm=2, **kw):
+    """Engine with its decode/prefill programs compiled off the clock."""
+    eng = ServingEngine(cfg, params, **kw)
+    eng._decode.lower(eng.params, eng.state).compile()
+    for r in _requests(cfg, n_warm, 2, seed=1):
+        eng.submit(r)
+    eng.run_to_completion()
+    eng.reset()
+    return eng
+
+
+def bench_paged_compare(cfg, params, args):
+    """Equal-batch dense vs paged: the paging overhead on decode tok/s,
+    plus the pool observability the dense engine cannot offer."""
+    # enough decode work per rep (and enough reps) that the ratio measures
+    # steady-state gather overhead, not dispatch jitter on a short burst
+    n_req, max_new = max(args.requests, 8), max(args.max_new, 32)
+    out = {}
+    for label, kw in (("dense", {}),
+                      ("paged", {"cache_block_size": args.cache_block_size})):
+        eng = _warmed_engine(cfg, params, max_batch=args.max_batch,
+                             max_seq=args.max_seq, decode_chunk=8,
+                             prefill_chunk=args.prefill_chunk, **kw)
+        best = None
+        for _ in range(max(3, args.repeats)):
+            eng.reset()
+            for r in _requests(cfg, n_req, max_new, seed=0):
+                eng.submit(r)
+            eng.run_to_completion()
+            st = eng.stats()
+            if best is None or st["decode_tok_s"] > best["decode_tok_s"]:
+                best = st
+        out[label] = {k: best[k] for k in (
+            "decode_tok_s", "cache_hbm_bytes", "slot_occupancy",
+            "peak_active_slots", "admit_attempts", "admit_blocked",
+            "admission_blocked_rate", "prefill_s", "prefill_tokens")}
+    out["decode_tok_s_ratio"] = (out["paged"]["decode_tok_s"]
+                                 / out["dense"]["decode_tok_s"])
+    print(f"paged_compare: dense {out['dense']['decode_tok_s']:.1f} tok/s "
+          f"({out['dense']['cache_hbm_bytes'] / 1e6:.2f} MB cache) vs paged "
+          f"{out['paged']['decode_tok_s']:.1f} tok/s "
+          f"({out['paged']['cache_hbm_bytes'] / 1e6:.2f} MB) -> ratio "
+          f"{out['decode_tok_s_ratio']:.3f}")
+    return out
+
+
+def bench_capacity(cfg, params, args):
+    """Fixed cache-HBM budget: dense spends max_batch x max_seq up front;
+    the paged pool holds the same bytes but admits by block need, so the
+    ragged workload packs more concurrent slots into the budget."""
+    bs = args.cache_block_size
+    dense_batch = args.max_batch
+    # pool sized to EXACTLY the dense engine's attention bytes (same block
+    # count), but spread over 4x the slots
+    nb = dense_batch * (args.max_seq // bs)
+    paged_batch = dense_batch * 4
+    n_req = max(args.requests, 2 * paged_batch)
+    max_new = max(4, min(args.max_new, 8))  # short gens: admission-bound
+    out = {}
+    for label, kw in (
+            ("dense", {"max_batch": dense_batch}),
+            ("paged", {"max_batch": paged_batch, "cache_block_size": bs,
+                       "num_cache_blocks": nb})):
+        eng = _warmed_engine(cfg, params, max_seq=args.max_seq,
+                             decode_chunk=8,
+                             prefill_chunk=args.prefill_chunk, **kw)
+        for r in _requests(cfg, n_req, max_new, seed=0):
+            eng.submit(r)
+        eng.run_to_completion()
+        st = eng.stats()
+        out[label] = {k: st[k] for k in (
+            "cache_hbm_bytes", "peak_active_slots", "slot_occupancy",
+            "admission_blocked_rate", "decode_tok_s")}
+        out[label]["max_batch"] = kw["max_batch"]
+    out["peak_slots_ratio"] = (out["paged"]["peak_active_slots"]
+                               / max(1, out["dense"]["peak_active_slots"]))
+    print(f"capacity (fixed budget): dense peaks at "
+          f"{out['dense']['peak_active_slots']} slots "
+          f"({out['dense']['cache_hbm_bytes'] / 1e6:.2f} MB); paged packs "
+          f"{out['paged']['peak_active_slots']} "
+          f"({out['paged']['cache_hbm_bytes'] / 1e6:.2f} MB) -> "
+          f"{out['peak_slots_ratio']:.1f}x concurrent slots")
+    return out
+
+
+def bench_prefix_fanout(cfg, params, args):
+    """One system prompt x N distinct suffixes: followers reuse the shared
+    prefix blocks by reference instead of re-prefilling them."""
+    bs = args.cache_block_size
+    sys_len = 8 * bs                       # 8 fully-shareable blocks
+    max_seq = max(args.max_seq, 2 * sys_len)
+    n_fan = 8
+    rng = np.random.default_rng(2)
+    sys_p = rng.integers(0, cfg.vocab_size, sys_len, dtype=np.int32)
+    prompts = [np.concatenate([sys_p, [i % cfg.vocab_size]]).astype(np.int32)
+               for i in range(n_fan)]
+    out = {"fanout": n_fan, "system_prompt_tokens": sys_len}
+    for label, kw in (("no_prefix", {}), ("prefix", {"prefix_cache": True})):
+        eng = _warmed_engine(cfg, params, max_batch=args.max_batch,
+                             max_seq=max_seq, decode_chunk=8,
+                             prefill_chunk=args.prefill_chunk,
+                             cache_block_size=bs, **kw)
+        best = None
+        for _ in range(max(1, args.repeats)):
+            eng.reset()
+            for i, p in enumerate(prompts):
+                eng.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+            eng.run_to_completion()
+            st = eng.stats()
+            if best is None or st["prefill_s"] < best["prefill_s"]:
+                best = st
+        keys = ["prefill_s", "prefill_dispatches", "prefill_tokens",
+                "prefill_tokens_reused"]
+        if "prefix_cache" in best:
+            out["prefix_cache"] = best["prefix_cache"]
+        out[label] = {k: best[k] for k in keys}
+    out["prefill_time_ratio"] = (out["no_prefix"]["prefill_s"]
+                                 / max(1e-9, out["prefix"]["prefill_s"]))
+    out["prefill_time_saved_s"] = (out["no_prefix"]["prefill_s"]
+                                   - out["prefix"]["prefill_s"])
+    print(f"prefix_fanout ({n_fan} x {sys_len}-token system prompt): "
+          f"prefill {out['no_prefix']['prefill_s'] * 1e3:.1f} ms -> "
+          f"{out['prefix']['prefill_s'] * 1e3:.1f} ms "
+          f"({out['prefill_time_ratio']:.1f}x less prefill time; "
+          f"{out['prefix']['prefill_tokens_reused']} tokens reused)")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -116,6 +260,14 @@ def main(argv=None):
     ap.add_argument("--repeats", type=int, default=2,
                     help="measured reps per chunk setting on one warmed "
                          "engine; best rep is reported")
+    ap.add_argument("--cache-block-size", type=int, default=8,
+                    help="block size for the paged-pool scenarios")
+    ap.add_argument("--no-paged", action="store_true",
+                    help="skip the paged-pool scenarios")
+    ap.add_argument("--assert-paged-ratio", type=float, default=None,
+                    metavar="R",
+                    help="exit nonzero unless paged decode tok/s >= R x "
+                         "dense (CI gate)")
     ap.add_argument("--out", default=None, help="write JSON here")
     args = ap.parse_args(argv)
     if args.smoke:
@@ -159,10 +311,24 @@ def main(argv=None):
         result["speedup_best_vs_per_tick"] = best["tok_s"] / base["tok_s"]
         print(f"best ({best['decode_chunk']}-token chunks) vs per-tick: "
               f"{result['speedup_best_vs_per_tick']:.2f}x")
+
+    failed = []
+    if not args.no_paged:
+        result["paged_compare"] = bench_paged_compare(cfg, params, args)
+        result["capacity"] = bench_capacity(cfg, params, args)
+        result["prefix_fanout"] = bench_prefix_fanout(cfg, params, args)
+        if args.assert_paged_ratio is not None:
+            r = result["paged_compare"]["decode_tok_s_ratio"]
+            if r < args.assert_paged_ratio:
+                failed.append(f"paged decode tok/s ratio {r:.3f} < "
+                              f"{args.assert_paged_ratio}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=2)
         print(f"wrote {args.out}")
+    if failed:
+        print("ASSERTION FAILED: " + "; ".join(failed))
+        return 1
     return 0
 
 

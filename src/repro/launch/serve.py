@@ -43,6 +43,16 @@ def main(argv=None):
                     help="per-request nucleus mass (>=1 disables)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="stop a slot when it samples this token id")
+    ap.add_argument("--cache-block-size", type=int, default=None,
+                    help="enable the block-paged KV cache pool with this "
+                         "many positions per block (must divide --max-seq)")
+    ap.add_argument("--num-cache-blocks", type=int, default=None,
+                    help="pool size in blocks incl. the reserved null block "
+                         "(default: dense-equivalent capacity)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="hash-based shared-prefix block reuse (requires "
+                         "--cache-block-size; identical prefixes prefill "
+                         "once and fan out by block reference)")
     ap.add_argument("--mode", default="lut_xla",
                     choices=list(MPGEMM_MODES))
     ap.add_argument("--fusion", default="auto",
@@ -77,12 +87,17 @@ def main(argv=None):
     if args.fusion == "tuned" and args.tuning_cache is None and not args.pretune:
         print("note: fusion=tuned without --tuning-cache falls back to the "
               "auto heuristic on every dispatch")
+    if args.prefix_cache and args.cache_block_size is None:
+        ap.error("--prefix-cache requires --cache-block-size")
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,
                         max_seq=args.max_seq,
                         decode_chunk=args.decode_chunk,
                         prefill_chunk=args.prefill_chunk,
                         eos_id=args.eos_id,
-                        tuning_cache=args.tuning_cache)
+                        tuning_cache=args.tuning_cache,
+                        cache_block_size=args.cache_block_size,
+                        num_cache_blocks=args.num_cache_blocks,
+                        prefix_cache=args.prefix_cache)
     if args.pretune:
         if eng.tuning_cache is None:  # tune in-memory for this process
             from repro.core import autotune
@@ -109,6 +124,17 @@ def main(argv=None):
     print(f"host syncs/token {st['host_syncs_per_token']:.4f} "
           f"(decode_chunk={args.decode_chunk}), chunk latency "
           f"p50 {st['p50_chunk_ms']:.1f} ms / p95 {st['p95_chunk_ms']:.1f} ms")
+    if st["paged"]:
+        line = (f"paged pool: {st['num_cache_blocks']} x "
+                f"{st['cache_block_size']}-token blocks, cache HBM "
+                f"{st['cache_hbm_bytes'] / 1e6:.2f} MB, occupancy "
+                f"{st['slot_occupancy']:.2f}, blocked admissions "
+                f"{st['admit_blocked']}/{st['admit_attempts']}")
+        if "prefix_cache" in st:
+            pc = st["prefix_cache"]
+            line += (f", prefix hits {pc['hits']} (reused "
+                     f"{st['prefill_tokens_reused']} prompt tokens)")
+        print(line)
     return 0
 
 

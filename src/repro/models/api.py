@@ -60,7 +60,8 @@ class _SsmLM:
 
     @staticmethod
     def forward(params, batch, cfg, *, caches=None, cache_pos=0, window=None,
-                token_valid=None):
+                token_valid=None, page_table=None):
+        del page_table  # SSM state is O(1)/slot: nothing to page
         h = transformer.embed_apply(params["embed"], batch["tokens"])
         h = h.astype(cfg.activation_dtype)
 

@@ -101,7 +101,8 @@ def compute_cross_kv(params: Params, enc_out: jax.Array, cfg):
 
 
 def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
-            window=None, token_valid=None) -> Tuple[jax.Array, Any, Dict]:
+            window=None, token_valid=None,
+            page_table=None) -> Tuple[jax.Array, Any, Dict]:
     del token_valid  # attention-only stack: see transformer.forward
     tokens = batch["tokens"]
     quant = cfg.quant
@@ -133,7 +134,8 @@ def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
         lp = constrain_tree(lp)  # §Perf T1
         a, nc = L.attention_apply(
             lp["attn"], L.layer_norm(lp["attn_norm"], hh, cfg.norm_eps), cfg,
-            kv_cache=lc, cache_pos=cache_pos, use_rope=False, quant=quant)
+            kv_cache=lc, cache_pos=cache_pos, use_rope=False, quant=quant,
+            page_table=page_table)
         hh = hh + a
         xa, _ = L.attention_apply(
             lp["xattn"], L.layer_norm(lp["xattn_norm"], hh, cfg.norm_eps), cfg,

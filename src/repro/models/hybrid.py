@@ -66,10 +66,11 @@ def _mamba_layer_apply(p, h, cfg, cache, quant, token_valid=None):
     return shard(h + y, "batch", "seq", None), nc
 
 
-def _shared_apply(p, h, cfg, kv, cache_pos, window, quant):
+def _shared_apply(p, h, cfg, kv, cache_pos, window, quant, page_table=None):
     a, kv = L.attention_apply(
         p["shared_attn"], L.rms_norm(p["attn_norm"], h, cfg.norm_eps), cfg,
-        kv_cache=kv, cache_pos=cache_pos, window=window, quant=quant)
+        kv_cache=kv, cache_pos=cache_pos, window=window, quant=quant,
+        page_table=page_table)
     h = shard(h + a, "batch", "seq", None)
     m = L.mlp_apply(p["shared_mlp"], L.rms_norm(p["mlp_norm"], h, cfg.norm_eps),
                     quant)
@@ -77,7 +78,8 @@ def _shared_apply(p, h, cfg, kv, cache_pos, window, quant):
 
 
 def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
-            window=None, token_valid=None) -> Tuple[jax.Array, Any, Dict]:
+            window=None, token_valid=None,
+            page_table=None) -> Tuple[jax.Array, Any, Dict]:
     # token_valid [B]: real-token counts for right-padded chunked prefill —
     # consumed by the mamba2 layers (state masking); the shared attention
     # block needs no masking (see transformer.forward).
@@ -111,7 +113,7 @@ def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
         hh, new_m = jax.lax.scan(inner, hh, ixs)
         kvc_in = None if gm_caches is None else kvc
         hh, new_kv = _shared_apply(params["shared"], hh, cfg, kvc_in,
-                                   cache_pos, window, quant)
+                                   cache_pos, window, quant, page_table)
         if gm_caches is None:
             return hh, None
         return hh, (new_m, new_kv)

@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["attn_cache", "mamba_cache", "mamba2_cache", "cache_len",
-           "batch_axes", "slice_batch", "merge_batch"]
+           "batch_axes", "seq_axes", "slice_batch", "merge_batch",
+           "paged_gather", "paged_scatter"]
 
 
 def attn_cache(n_layers: int, batch: int, s_cache: int, n_kv: int, head_dim: int,
@@ -67,14 +68,37 @@ def cache_len(cache) -> int:
 
 def batch_axes(cache_b1, cache_b2):
     """Per-leaf batch axis, from two cache structs built with batch=1/2."""
-    def one(a, b):
+    def one(path, a, b):
         diffs = [i for i, (p, q) in enumerate(zip(a.shape, b.shape))
                  if p != q]
         if len(diffs) != 1:
             raise ValueError(
-                f"ambiguous batch axis for cache leaf {a.shape} vs {b.shape}")
+                f"ambiguous batch axis for cache leaf at "
+                f"{jax.tree_util.keystr(path)!r}: probe shapes {a.shape} vs "
+                f"{b.shape} differ in {len(diffs)} dims (expected exactly 1)")
         return diffs[0]
-    return jax.tree.map(one, cache_b1, cache_b2)
+    return jax.tree_util.tree_map_with_path(one, cache_b1, cache_b2)
+
+
+def seq_axes(cache_s1, cache_s2):
+    """Per-leaf sequence axis, from two cache structs built with different
+    ``s_cache`` (same batch). Leaves whose shape is independent of the
+    sequence capacity — SSM conv/recurrent state, cross-attention and image
+    KV, rolling-window caches clamped below both probes — return ``-1``:
+    they carry O(1) state per slot and stay dense slot-indexed under the
+    block-paged pool (only sequence-extensive leaves are worth paging)."""
+    def one(path, a, b):
+        if a.shape == b.shape:
+            return -1
+        diffs = [i for i, (p, q) in enumerate(zip(a.shape, b.shape))
+                 if p != q]
+        if len(diffs) != 1:
+            raise ValueError(
+                f"ambiguous sequence axis for cache leaf at "
+                f"{jax.tree_util.keystr(path)!r}: probe shapes {a.shape} vs "
+                f"{b.shape} differ in {len(diffs)} dims (expected 0 or 1)")
+        return diffs[0]
+    return jax.tree_util.tree_map_with_path(one, cache_s1, cache_s2)
 
 
 def slice_batch(caches, axes, idx):
@@ -90,3 +114,41 @@ def merge_batch(caches, slot_caches, axes, idx):
         lambda c, sc, ax: jax.lax.dynamic_update_slice_in_dim(
             c, sc.astype(c.dtype), idx, axis=ax),
         caches, slot_caches, axes)
+
+
+# ---------------------------------------------------------------------------
+# block-paged pool views (paged KV cache, vLLM/TensorRT-LLM style)
+# ---------------------------------------------------------------------------
+# A paged attention cache stores fixed-size blocks in a shared pool: the
+# per-layer leaf is [num_blocks, block_size, ...] instead of [B, S, ...],
+# and each slot's logical sequence is the concatenation of the blocks its
+# page-table row names. Logical position p of slot i lives at
+# pool[table[i, p // bs], p % bs]. Block 0 is reserved as the NULL block:
+# slots with no allocation (idle / retired) point every table entry at it,
+# so their masked-out decode writes land somewhere harmless. Reads mask by
+# valid length, and the flash-softmax turns masked scores into exactly-zero
+# probabilities (finfo.min -> exp underflow), so garbage beyond the valid
+# length — null-block junk included — contributes exactly 0.0 and the paged
+# path is bit-identical to the dense one.
+
+def paged_gather(leaf, page_table):
+    """[N, bs, ...] pool leaf + [B, nb] page table -> [B, nb*bs, ...]
+    contiguous logical view (block j of a slot lands at view offset j*bs)."""
+    g = leaf[page_table]
+    b, nb, bs = g.shape[:3]
+    return g.reshape((b, nb * bs) + g.shape[3:])
+
+
+def paged_scatter(leaf, vals, page_table, positions):
+    """Write ``vals`` [B, S, ...] at logical ``positions`` [B, S] of each
+    slot's paged sequence; ``leaf`` is a [N, bs, ...] pool leaf.
+
+    Positions at or beyond the table's reach (nb*bs) are routed to the null
+    block instead of letting the gather clamp silently alias a real block
+    (a right-padded prefill tail can run past the allocated range)."""
+    bs = leaf.shape[1]
+    nb = page_table.shape[1]
+    blk = positions // bs
+    phys = jnp.take_along_axis(page_table, jnp.minimum(blk, nb - 1), axis=1)
+    phys = jnp.where(blk < nb, phys, 0)
+    return leaf.at[phys, positions % bs].set(vals.astype(leaf.dtype))

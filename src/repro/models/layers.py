@@ -26,6 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import mpgemm as mp
 from repro.core.quantize import fake_quant
 from repro.distributed.sharding import current_plan
+from repro.models import kvcache
 
 Params = Dict[str, Any]
 
@@ -378,8 +379,15 @@ def attention_apply(
     causal: bool = True,
     use_rope: bool = True,
     quant: Optional[dict] = None,
+    page_table: Optional[jax.Array] = None,
 ):
-    """Returns (out, new_kv_cache). Handles train/prefill/decode/cross."""
+    """Returns (out, new_kv_cache). Handles train/prefill/decode/cross.
+
+    With ``page_table`` ([B, nb] int32) the cache leaves are block-pool
+    shaped [num_blocks, block_size, ...]: writes scatter through the table
+    and reads gather the slot's blocks into a contiguous [B, nb*bs] view
+    (see kvcache.paged_gather/paged_scatter for the exactness argument).
+    """
     b, s, d = x.shape
     hd = cfg.head_dim
     # per-slot decode (continuous batching): cache_pos is a [B] vector and
@@ -402,16 +410,75 @@ def attention_apply(
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
 
+    # ---- block-paged cache (pool leaves + page table): one branch covers
+    # per-slot decode (cache_pos [B], s == 1) and chunked prefill at a
+    # scalar offset — scatter the fresh k/v through the table, gather the
+    # slot's logical view, then run the exact chunked_attention call the
+    # matching dense branch runs (bit-exact: see kvcache paged helpers).
+    if page_table is not None and kv_cache is not None and xattn_kv is None:
+        if window is not None:
+            raise NotImplementedError(
+                "paged KV cache does not support sliding-window attention "
+                "(rolling caches have their own fixed-size layout)")
+        cp = jnp.asarray(cache_pos)
+        base = cp if per_slot else jnp.broadcast_to(cp, (b,))
+        pos2d = base[:, None] + jnp.arange(s)[None, :]  # [B, S] global write
+        if len(kv_cache) == 4:  # int8 pool: codes + per-(pos, head) scales
+            kq, ks_new = _quantize_kv_slice(k)
+            vq, vs_new = _quantize_kv_slice(v)
+            new_cache = tuple(
+                kvcache.paged_scatter(leaf, vals, page_table, pos2d)
+                for leaf, vals in zip(kv_cache, (kq, vq, ks_new, vs_new)))
+            kg, vg, ksg, vsg = (kvcache.paged_gather(leaf, page_table)
+                                for leaf in new_cache)
+        else:
+            new_cache = tuple(
+                kvcache.paged_scatter(leaf, vals, page_table, pos2d)
+                for leaf, vals in zip(kv_cache, (k, v)))
+            kg, vg = (kvcache.paged_gather(leaf, page_table)
+                      for leaf in new_cache)
+            ksg = vsg = None
+        if per_slot:
+            assert s == 1, "per-slot cache positions only support decode (s=1)"
+            if ksg is None:
+                kg, vg = kg.astype(q.dtype), vg.astype(q.dtype)
+            out = chunked_attention(
+                q, kg, vg, k_scale=ksg, v_scale=vsg,
+                q_offset=0, causal=False, kv_valid_len=base + 1,
+                chunk=getattr(cfg, "attn_chunk", 1024))
+        else:
+            out = chunked_attention(
+                q, kg, vg, k_scale=ksg, v_scale=vsg,
+                q_offset=cp, causal=causal, kv_valid_len=cp + s,
+                chunk=getattr(cfg, "attn_chunk", 1024))
+        out = out.reshape(b, s, cfg.n_heads * hd)
+        return lut_dense(p["wo"], out, quant), new_cache
+
     if per_slot and kv_cache is not None and xattn_kv is None:
         assert s == 1, "per-slot cache positions only support decode (s=1)"
-        ck, cv = kv_cache
         bi = jnp.arange(b)
-        ck = ck.at[bi, jnp.asarray(cache_pos)].set(k[:, 0].astype(ck.dtype))
-        cv = cv.at[bi, jnp.asarray(cache_pos)].set(v[:, 0].astype(cv.dtype))
+        cp = jnp.asarray(cache_pos)
+        if len(kv_cache) == 4:  # int8 KV cache: quantize the new token slice
+            ck, cv, cks, cvs = kv_cache
+            kq, ks_new = _quantize_kv_slice(k)
+            vq, vs_new = _quantize_kv_slice(v)
+            ck = ck.at[bi, cp].set(kq[:, 0])
+            cv = cv.at[bi, cp].set(vq[:, 0])
+            cks = cks.at[bi, cp].set(ks_new[:, 0])
+            cvs = cvs.at[bi, cp].set(vs_new[:, 0])
+            out = chunked_attention(
+                q, ck, cv, k_scale=cks, v_scale=cvs,
+                q_offset=0, causal=False, kv_valid_len=cp + 1,
+                chunk=getattr(cfg, "attn_chunk", 1024))
+            out = out.reshape(b, s, cfg.n_heads * hd)
+            return lut_dense(p["wo"], out, quant), (ck, cv, cks, cvs)
+        ck, cv = kv_cache
+        ck = ck.at[bi, cp].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[bi, cp].set(v[:, 0].astype(cv.dtype))
         out = chunked_attention(
             q, ck.astype(q.dtype), cv.astype(q.dtype),
             q_offset=0, causal=False,
-            kv_valid_len=jnp.asarray(cache_pos) + 1,
+            kv_valid_len=cp + 1,
             chunk=getattr(cfg, "attn_chunk", 1024))
         out = out.reshape(b, s, cfg.n_heads * hd)
         return lut_dense(p["wo"], out, quant), (ck, cv)

@@ -275,19 +275,21 @@ def block_init(key, cfg, dtype=jnp.float32) -> Params:
 
 
 def block_apply(p: Params, h: jax.Array, cfg, *, cache=None, cache_pos=0,
-                window=None, quant=None):
+                window=None, quant=None, page_table=None):
     a, cache = L.attention_apply(
         p["attn"], L.rms_norm(p["attn_norm"], h, cfg.norm_eps), cfg,
-        kv_cache=cache, cache_pos=cache_pos, window=window, quant=quant)
+        kv_cache=cache, cache_pos=cache_pos, window=window, quant=quant,
+        page_table=page_table)
     h = shard(h + a, "batch", "seq", None)
     m, aux = moe_mlp_apply(p["moe"], L.rms_norm(p["mlp_norm"], h, cfg.norm_eps),
                            cfg, quant)
     return shard(h + m, "batch", "seq", None), cache, aux
 
 
-def _scan_block(p, h, cfg, cache, cache_pos, window, quant):
+def _scan_block(p, h, cfg, cache, cache_pos, window, quant, page_table=None):
     h, cache, aux = block_apply(p, h, cfg, cache=cache, cache_pos=cache_pos,
-                                window=window, quant=quant)
+                                window=window, quant=quant,
+                                page_table=page_table)
     return h, cache, aux
 
 
@@ -316,7 +318,8 @@ def init(key, cfg, dtype=None) -> Params:
 
 
 def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
-            window=None, token_valid=None) -> Tuple[jax.Array, Any, Dict]:
+            window=None, token_valid=None,
+            page_table=None) -> Tuple[jax.Array, Any, Dict]:
     del token_valid  # attention-only stack: see transformer.forward
     tokens = batch["tokens"]
     quant = cfg.quant
@@ -336,7 +339,8 @@ def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
             lp = constrain_tree(lp)  # §Perf T1
             lc = None if dense_caches is None else xs[1]
             hh, nc = TR.block_apply(lp, hh, cfg, cache=lc, cache_pos=cache_pos,
-                                    window=window, quant=quant)
+                                    window=window, quant=quant,
+                                    page_table=page_table)
             return hh, nc
         dbody = jax.checkpoint(dbody, prevent_cse=False)
         xs = (params["dense_layers"] if dense_caches is None
@@ -348,7 +352,8 @@ def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
         lp = xs if moe_caches is None else xs[0]
         lp = constrain_tree(lp)  # §Perf T1
         lc = None if moe_caches is None else xs[1]
-        hh, nc, aux = _scan_block(lp, hh, cfg, lc, cache_pos, window, quant)
+        hh, nc, aux = _scan_block(lp, hh, cfg, lc, cache_pos, window, quant,
+                                  page_table)
         return (hh, lb + aux["lb_loss"], zl + aux["router_z_loss"]), nc
 
     body = jax.checkpoint(body, prevent_cse=False)

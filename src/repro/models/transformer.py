@@ -67,10 +67,11 @@ def block_init(key, cfg, dtype=jnp.float32) -> Params:
 
 
 def block_apply(p: Params, h: jax.Array, cfg, *, cache=None, cache_pos=0,
-                window=None, quant=None):
+                window=None, quant=None, page_table=None):
     a, cache = L.attention_apply(
         p["attn"], L.rms_norm(p["attn_norm"], h, cfg.norm_eps), cfg,
-        kv_cache=cache, cache_pos=cache_pos, window=window, quant=quant)
+        kv_cache=cache, cache_pos=cache_pos, window=window, quant=quant,
+        page_table=page_table)
     h = shard(h + a, "batch", "seq", None)
     m = L.mlp_apply(p["mlp"], L.rms_norm(p["mlp_norm"], h, cfg.norm_eps), quant)
     return shard(h + m, "batch", "seq", None), cache
@@ -88,8 +89,11 @@ def stack_init(key, cfg, n_layers: int, block_init_fn=block_init,
 
 def stack_apply(stacked: Params, h: jax.Array, cfg, *,
                 caches=None, cache_pos=0, window=None, quant=None,
-                block_apply_fn=block_apply):
-    """lax.scan over the L leading axis of params (+ caches)."""
+                block_apply_fn=block_apply, page_table=None):
+    """lax.scan over the L leading axis of params (+ caches).
+
+    ``page_table`` is closed over, NOT scanned: it has no leading L dim
+    (every layer's pool blocks share one per-slot table)."""
 
     def body(carry, xs):
         hh = carry
@@ -101,7 +105,8 @@ def stack_apply(stacked: Params, h: jax.Array, cfg, *,
         lp, lc = xs
         lp = constrain_tree(lp)
         hh, nc = block_apply_fn(lp, hh, cfg, cache=lc, cache_pos=cache_pos,
-                                window=window, quant=quant)
+                                window=window, quant=quant,
+                                page_table=page_table)
         return hh, nc
 
     body = jax.checkpoint(body, prevent_cse=False)
@@ -127,7 +132,7 @@ def init(key, cfg, dtype=None) -> Params:
 
 def forward(params: Params, batch: Dict[str, jax.Array], cfg, *,
             caches=None, cache_pos=0, window=None,
-            token_valid=None) -> Tuple[jax.Array, Any, Dict]:
+            token_valid=None, page_table=None) -> Tuple[jax.Array, Any, Dict]:
     # token_valid ([B] real-token counts for right-padded chunked prefill) is
     # accepted for interface uniformity but unused: causal attention already
     # prevents real positions from seeing padded tails, and pad k/v land at
@@ -138,7 +143,7 @@ def forward(params: Params, batch: Dict[str, jax.Array], cfg, *,
     h = embed_apply(params["embed"], tokens).astype(cfg.activation_dtype)
     h, new_caches = stack_apply(params["layers"], h, cfg, caches=caches,
                                 cache_pos=cache_pos, window=window,
-                                quant=cfg.quant)
+                                quant=cfg.quant, page_table=page_table)
     h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
     logits = head_apply(params["lm_head"], h, cfg.quant)
     return logits, new_caches, {}

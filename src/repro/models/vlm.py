@@ -77,7 +77,8 @@ def compute_image_kv(params: Params, image_embeds: jax.Array, cfg):
 
 
 def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
-            window=None, token_valid=None) -> Tuple[jax.Array, Any, Dict]:
+            window=None, token_valid=None,
+            page_table=None) -> Tuple[jax.Array, Any, Dict]:
     del token_valid  # attention-only stack: see transformer.forward
     tokens = batch["tokens"]
     quant = cfg.quant
@@ -103,7 +104,8 @@ def forward(params: Params, batch, cfg, *, caches=None, cache_pos=0,
             lp = constrain_tree(lp)  # §Perf T1
             lc = None if gcache is None else lxs[1]
             return TR.block_apply(lp, c, cfg, cache=lc, cache_pos=cache_pos,
-                                  window=window, quant=quant)
+                                  window=window, quant=quant,
+                                  page_table=page_table)
 
         inner = jax.checkpoint(inner, prevent_cse=False)
         ixs = gp if gcache is None else (gp, gcache)

@@ -47,10 +47,10 @@ Known edges (documented, covered by tests):
 from __future__ import annotations
 
 import dataclasses
-import queue
 import time
 import warnings
-from typing import Any, List, Optional
+from collections import deque
+from typing import Any, Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +58,7 @@ import numpy as np
 
 from repro.configs.registry import ArchConfig
 from repro.models import api, kvcache
+from repro.serving import blockpool
 from repro.serving.sampler import sample
 
 
@@ -90,13 +91,15 @@ class EngineState:
     top_k: jax.Array        # [B] i32
     top_p: jax.Array        # [B] f32
     key: jax.Array          # PRNG key
+    page_table: jax.Array   # [B, blocks_per_slot] i32 pool block per logical
+                            # page (paged mode; [B, 1] zeros when dense)
     caches: Any             # model cache pytree
 
 
 jax.tree_util.register_dataclass(
     EngineState,
     data_fields=["pos", "budget", "last_tok", "active", "temperature",
-                 "top_k", "top_p", "key", "caches"],
+                 "top_k", "top_p", "key", "page_table", "caches"],
     meta_fields=[])
 
 
@@ -104,7 +107,11 @@ class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
                  max_seq: int = 512, seed: int = 0, decode_chunk: int = 8,
                  prefill_chunk: int = 32, eos_id: Optional[int] = None,
-                 tuning_cache: Optional[str] = None):
+                 tuning_cache: Optional[str] = None,
+                 cache_block_size: Optional[int] = None,
+                 num_cache_blocks: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 kv_cache_dtype: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -113,7 +120,7 @@ class ServingEngine:
         self.prefill_chunk = max(1, min(prefill_chunk, max_seq))
         self.eos_id = eos_id
         self._seed = seed
-        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * max_batch
 
         # persistent kernel-tuning cache: activates fusion="tuned" lookups
@@ -124,17 +131,97 @@ class ServingEngine:
             from repro.core import autotune
             self.tuning_cache = autotune.configure(tuning_cache)
 
+        kv_dt = kv_cache_dtype or cfg.kv_cache_dtype
+        self._cache_dtype = "int8" if kv_dt == "int8" else jnp.float32
+
         # per-leaf batch axes of the cache pytree (shape-diff discovery:
         # hybrid stacks carry batch at axis 2, plain stacks at axis 1)
         c1 = jax.eval_shape(
-            lambda: api.init_cache(cfg, 1, max_seq, dtype=jnp.float32))
+            lambda: api.init_cache(cfg, 1, max_seq, dtype=self._cache_dtype))
         c2 = jax.eval_shape(
-            lambda: api.init_cache(cfg, 2, max_seq, dtype=jnp.float32))
+            lambda: api.init_cache(cfg, 2, max_seq, dtype=self._cache_dtype))
         self._axes = kvcache.batch_axes(c1, c2)
+        # per-leaf sequence axes (same probe trick, varying s_cache): leaves
+        # with no sequence axis — SSM conv/ssm state, image/cross KV — are
+        # O(1) per slot and stay dense slot-indexed even in paged mode
+        s1 = jax.eval_shape(
+            lambda: api.init_cache(cfg, 1, 16, dtype=self._cache_dtype))
+        s2 = jax.eval_shape(
+            lambda: api.init_cache(cfg, 1, 32, dtype=self._cache_dtype))
+        self._seq_axes = kvcache.seq_axes(s1, s2)
         # zero batch-1 slot caches: the prefill starting point for every
         # admit (a retiring request's state must never leak into its slot's
         # next occupant — SSM states are cumulative)
-        self._zero_slot = api.init_cache(cfg, 1, max_seq, dtype=jnp.float32)
+        self._zero_slot = api.init_cache(cfg, 1, max_seq,
+                                         dtype=self._cache_dtype)
+
+        # ---- block-paged cache pool (optional) ----------------------------
+        self.paged = cache_block_size is not None
+        self.prefix_caching = bool(prefix_cache) and self.paged
+        self._alloc: Optional[blockpool.BlockAllocator] = None
+        self._prefix: Optional[blockpool.PrefixCache] = None
+        if self.paged:
+            bs = int(cache_block_size)
+            if bs < 1 or max_seq % bs != 0:
+                raise ValueError(
+                    f"cache_block_size={bs} must be >= 1 and divide "
+                    f"max_seq={max_seq}: the gathered paged view must be "
+                    f"exactly max_seq long for bit-exact parity with dense")
+            self.cache_block_size = bs
+            self.blocks_per_slot = max_seq // bs
+            if num_cache_blocks is None:
+                # dense-equivalent capacity: every slot can hold max_seq,
+                # plus the reserved null block
+                num_cache_blocks = max_batch * self.blocks_per_slot + 1
+            if num_cache_blocks < self.blocks_per_slot + 1:
+                raise ValueError(
+                    f"num_cache_blocks={num_cache_blocks} cannot hold even "
+                    f"one max_seq={max_seq} request at block size {bs} "
+                    f"(need >= {self.blocks_per_slot + 1} incl. null block)")
+            self.num_cache_blocks = int(num_cache_blocks)
+
+            # pooled leaves must carry (batch, seq) adjacently so that
+            # init_cache(cfg, num_blocks, block_size) IS the pool ctor
+            def _check(path, bax, sax):
+                if sax >= 0 and sax != bax + 1:
+                    raise ValueError(
+                        f"cannot page cache leaf at "
+                        f"{jax.tree_util.keystr(path)!r}: sequence axis "
+                        f"{sax} is not adjacent to batch axis {bax}")
+                return sax >= 0
+            self._pooled = jax.tree_util.tree_map_with_path(
+                _check, self._axes, self._seq_axes)
+            pooled_leaves = jax.tree.leaves(self._pooled)
+            self.has_pooled = any(pooled_leaves)
+            self._all_pooled = all(pooled_leaves)
+            if self.prefix_caching and not all(jax.tree.leaves(self._pooled)):
+                warnings.warn(
+                    "prefix caching needs every cache leaf paged; family="
+                    f"{cfg.family!r} holds slot-resident state (SSM/cross "
+                    "KV) that cannot fan out by block reference — disabled")
+                self.prefix_caching = False
+
+            nb_total = self.num_cache_blocks
+
+            def _build_paged():
+                # one jitted builder selecting pool vs dense per leaf: XLA
+                # DCEs the unused half, so SSM state is never allocated at
+                # batch=num_blocks nor attention KV at [B, max_seq] density
+                pool = api.init_cache(cfg, nb_total, bs,
+                                      dtype=self._cache_dtype)
+                dense = api.init_cache(cfg, max_batch, max_seq,
+                                       dtype=self._cache_dtype)
+                return jax.tree.map(
+                    lambda p, d, pooled: p if pooled else d,
+                    pool, dense, self._pooled)
+
+            self._build_paged = jax.jit(_build_paged)
+            # prefill view: pool leaves ride through whole; unpooled leaves
+            # are a batch-1 slot view (donated through the chunk loop)
+            self._prefill_paged = jax.jit(self._paged_prefill_impl,
+                                          donate_argnums=(1,))
+            self._copy_block = jax.jit(self._copy_block_impl,
+                                       donate_argnums=(0,))
 
         # the decode carry (caches dominate it) is donated: without donation
         # every chunk dispatch copies the full [B, S] cache pytree just to
@@ -155,8 +242,21 @@ class ServingEngine:
         if seed is None:
             seed = self._seed
         b = self.max_batch
-        self.queue = queue.Queue()
+        self.queue = deque()
         self.slots = [None] * b
+        if self.paged:
+            self._alloc = blockpool.BlockAllocator(self.num_cache_blocks)
+            self._prefix = (blockpool.PrefixCache(self._alloc)
+                            if self.prefix_caching else None)
+            self._pending_keys: set = set()  # divergence entries whose last
+            # position is unwritten until the origin's first decode chunk
+            self._slot_blocks: List[List[int]] = [[] for _ in range(b)]
+            caches = self._build_paged()
+            page_table = jnp.zeros((b, self.blocks_per_slot), jnp.int32)
+        else:
+            caches = api.init_cache(self.cfg, b, self.max_seq,
+                                    dtype=self._cache_dtype)
+            page_table = jnp.zeros((b, 1), jnp.int32)
         self.state = EngineState(
             pos=jnp.zeros(b, jnp.int32),
             budget=jnp.zeros(b, jnp.int32),
@@ -166,12 +266,20 @@ class ServingEngine:
             top_k=jnp.zeros(b, jnp.int32),
             top_p=jnp.ones(b, jnp.float32),
             key=jax.random.key(seed),
-            caches=api.init_cache(self.cfg, b, self.max_seq,
-                                  dtype=jnp.float32))
+            page_table=page_table,
+            caches=caches)
         self.decode_syncs = 0       # host round-trips in the decode loop
         self.decode_tokens = 0      # tokens emitted by decode chunks
         self.prefill_dispatches = 0
         self.chunk_latencies: List[float] = []  # seconds per decode chunk
+        self.prefill_s = 0.0        # wall seconds spent in prefill dispatch
+        self.prefill_tokens = 0     # prompt tokens actually prefilled
+        self.prefill_tokens_reused = 0  # prompt tokens served from shared
+        # blocks (prefix cache hits) instead of being re-prefilled
+        self.admit_attempts = 0
+        self.admit_blocked = 0      # admissions deferred for lack of blocks
+        self.occupancy_samples: List[float] = []  # slot occupancy per chunk
+        self.peak_active_slots = 0
 
     # -- jitted programs ----------------------------------------------------
     def _prefill_chunk_impl(self, params, slot_caches, tokens, offset, valid):
@@ -182,13 +290,41 @@ class ServingEngine:
             cache_pos=offset, token_valid=jnp.reshape(valid, (1,)))
         return new_caches
 
+    def _paged_prefill_impl(self, params, view_caches, tokens, offset, valid,
+                            page_row):
+        """One [1, C] prompt chunk written straight into the pool: pooled
+        leaves scatter through the slot's page-table row ``page_row``
+        ([1, blocks_per_slot]); unpooled (SSM/cross) leaves ride along as a
+        batch-1 slot view. The whole view is donated through the chunk loop,
+        so pool pages are updated in place across chunks."""
+        _, new_caches, _ = api.forward(
+            params, {"tokens": tokens}, self.cfg, caches=view_caches,
+            cache_pos=offset, token_valid=jnp.reshape(valid, (1,)),
+            page_table=page_row)
+        return new_caches
+
+    def _copy_block_impl(self, caches, src, dst):
+        """Copy-on-write: clone pool block ``src`` into ``dst`` on every
+        pooled leaf (unpooled leaves pass through untouched)."""
+        def one(c, bax, sax):
+            if sax < 0:
+                return c
+            blk = jax.lax.dynamic_index_in_dim(c, src, axis=bax,
+                                               keepdims=True)
+            return jax.lax.dynamic_update_slice_in_dim(c, blk, dst, axis=bax)
+        return jax.tree.map(one, caches, self._axes, self._seq_axes)
+
     def _decode_chunk_impl(self, params, state):
         """N decode steps for the whole pool in one dispatch."""
+        # the page table is closed over per chunk, not threaded through the
+        # scan carry: no decode step ever remaps pages
+        paged_kw = ({"page_table": state.page_table} if self.paged else {})
+
         def step(st, _):
             key, sub = jax.random.split(st.key)
             logits, new_caches, _ = api.forward(
                 params, {"tokens": st.last_tok[:, None]}, self.cfg,
-                caches=st.caches, cache_pos=st.pos)
+                caches=st.caches, cache_pos=st.pos, **paged_kw)
             nxt = sample(sub, logits[:, -1], temperature=st.temperature,
                          top_k=st.top_k, top_p=st.top_p)
             # emit iff live and the cache has room for this token
@@ -216,31 +352,21 @@ class ServingEngine:
     # -- host loop (chunk boundaries only) ----------------------------------
     def submit(self, req: Request):
         req.output = []
-        self.queue.put(req)
+        self.queue.append(req)
 
-    def _admit_one(self, i: int, req: Request):
+    def _truncate(self, req: Request) -> np.ndarray:
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError(f"request {req.uid}: empty prompt")
         if prompt.size > self.max_seq:
             keep = max(1, self.max_seq - req.max_new_tokens)
             prompt = prompt[-keep:]
-        plen = int(prompt.size)
+        return prompt
 
-        # chunked prefill of prompt[:-1] into a zeroed batch-1 slot view;
-        # the last token is fed to the first decode step instead
-        c = self.prefill_chunk
-        slot_caches = self._zero_slot
-        for j in range(0, plen - 1, c):
-            vl = min(c, plen - 1 - j)
-            buf = np.zeros((1, c), np.int32)
-            buf[0, :vl] = prompt[j:j + vl]
-            slot_caches = self._prefill(
-                self.params, slot_caches, jnp.asarray(buf),
-                np.int32(j), np.int32(vl))
-            self.prefill_dispatches += 1
-
+    def _set_slot(self, i: int, req: Request, prompt, caches, **extra):
+        """Common admission epilogue: per-slot control state + caches."""
         st = self.state
+        plen = int(prompt.size)
         live = req.max_new_tokens > 0
         self.state = dataclasses.replace(
             st,
@@ -251,47 +377,245 @@ class ServingEngine:
             temperature=st.temperature.at[i].set(float(req.temperature)),
             top_k=st.top_k.at[i].set(int(req.top_k)),
             top_p=st.top_p.at[i].set(float(req.top_p)),
-            caches=self._merge(st.caches, slot_caches, np.int32(i)))
+            caches=caches, **extra)
         if live:
             self.slots[i] = req
         else:
             req.done = True  # nothing to generate
+        return live
+
+    def _admit_one(self, i: int, req: Request):
+        prompt = self._truncate(req)
+        plen = int(prompt.size)
+
+        # chunked prefill of prompt[:-1] into a zeroed batch-1 slot view;
+        # the last token is fed to the first decode step instead
+        t0 = time.perf_counter()
+        c = self.prefill_chunk
+        slot_caches = self._zero_slot
+        for j in range(0, plen - 1, c):
+            vl = min(c, plen - 1 - j)
+            buf = np.zeros((1, c), np.int32)
+            buf[0, :vl] = prompt[j:j + vl]
+            slot_caches = self._prefill(
+                self.params, slot_caches, jnp.asarray(buf),
+                np.int32(j), np.int32(vl))
+            self.prefill_dispatches += 1
+            self.prefill_tokens += vl
+        self.prefill_s += time.perf_counter() - t0
+
+        self._set_slot(i, req, prompt,
+                       self._merge(self.state.caches, slot_caches,
+                                   np.int32(i)))
+
+    def _admit_one_paged(self, i: int, req: Request) -> bool:
+        """Paged admission: reserve blocks, reuse shared-prefix blocks,
+        prefill only the unshared suffix. Returns False (leaving the
+        request queued and the engine untouched) when the pool cannot
+        grant the reservation."""
+        prompt = self._truncate(req)
+        plen = int(prompt.size)
+        bs = self.cache_block_size
+
+        # all-or-nothing reservation covering every position this slot can
+        # ever touch: prefill writes 0..plen-2, decode writes plen-1 onward,
+        # and a finished slot keeps (idempotently) rewriting its frozen
+        # position until the next chunk boundary
+        n_need = 0
+        if self.has_pooled:
+            cap = min(plen + max(0, req.max_new_tokens), self.max_seq)
+            n_need = max(1, -(-cap // bs))
+
+        # shared-prefix lookup: block j is shared READ-ONLY only if it lies
+        # entirely below the first decode write — (j+1)*bs <= plen-1
+        shared: List[int] = []
+        cow_src = None
+        m_share = (plen - 1) // bs
+        if self._prefix is not None:
+            for j in range(min(m_share, n_need)):
+                key = blockpool.chain_key(prompt[:(j + 1) * bs])
+                bid = self._prefix.get(key)
+                if bid is None or key in self._pending_keys:
+                    break
+                shared.append(bid)
+            if len(shared) == m_share and (m_share + 1) * bs == plen:
+                # divergence block ends exactly at plen: its content is a
+                # pure function of the prompt, but decode overwrites its
+                # last position — reuse is copy-on-write (pending entries
+                # are fine here: the copy's tail is rewritten before read)
+                cow_src = self._prefix.get(blockpool.chain_key(prompt))
+        m0 = len(shared)
+
+        # pin shared blocks BEFORE eviction can run: evict_until() may drop
+        # the very entries we just looked up, and an unpinned block could be
+        # freed and reissued to this same allocation
+        for bid in shared:
+            self._alloc.incref(bid)
+        if cow_src is not None:
+            self._alloc.incref(cow_src)
+        n_priv = n_need - m0
+        blocks = self._alloc.alloc(n_priv)
+        if blocks is None and self._prefix is not None:
+            self._prefix.evict_until(n_priv)
+            blocks = self._alloc.alloc(n_priv)
+        if blocks is None:
+            for bid in shared:
+                self._alloc.decref(bid)
+            if cow_src is not None:
+                self._alloc.decref(cow_src)
+            return False  # admission blocked: not enough free blocks
+
+        row = shared + blocks
+        self._slot_blocks[i] = list(row)
+        row_arr = np.zeros(self.blocks_per_slot, np.int32)
+        row_arr[:len(row)] = row
+        st = self.state
+        new_pt = st.page_table.at[i].set(jnp.asarray(row_arr))
+        caches = st.caches
+
+        if cow_src is not None:
+            caches = self._copy_block(caches, np.int32(cow_src),
+                                      np.int32(blocks[0]))
+            self._alloc.decref(cow_src)  # private copy taken
+            start = (m0 + 1) * bs
+        else:
+            start = m0 * bs
+        self.prefill_tokens_reused += min(start, plen - 1)
+
+        # prefill the unshared suffix straight into the pool (prefix hits
+        # skip whole chunks; a full COW hit skips prefill entirely)
+        t0 = time.perf_counter()
+        if start >= plen - 1 and self._all_pooled:
+            # everything came from shared blocks and there is no slot-
+            # resident state to reset: the fan-out fast path is pure
+            # bookkeeping, zero device work
+            new_caches = caches
+        else:
+            page_row = jnp.asarray(row_arr)[None, :]
+            # fresh zero views for the unpooled leaves each admit: the
+            # previous admit's views were donated (invalidated) by the
+            # prefill jit
+            view = jax.tree.map(
+                lambda c, z, pooled: c if pooled
+                else jnp.zeros(z.shape, z.dtype),
+                caches, self._zero_slot, self._pooled)
+            c = self.prefill_chunk
+            for j in range(start, plen - 1, c):
+                vl = min(c, plen - 1 - j)
+                buf = np.zeros((1, c), np.int32)
+                buf[0, :vl] = prompt[j:j + vl]
+                view = self._prefill_paged(self.params, view,
+                                           jnp.asarray(buf), np.int32(j),
+                                           np.int32(vl), page_row)
+                self.prefill_dispatches += 1
+                self.prefill_tokens += vl
+            # merge eagerly in python: pooled leaves pass through BY
+            # REFERENCE (the pool was updated in place via donation);
+            # unpooled leaves are written into slot i of the dense half
+            new_caches = jax.tree.map(
+                lambda cc, v, bax, pooled: v if pooled else
+                jax.lax.dynamic_update_slice_in_dim(
+                    cc, v.astype(cc.dtype), i, axis=bax),
+                caches, view, self._axes, self._pooled)
+        self.prefill_s += time.perf_counter() - t0
+
+        live = self._set_slot(i, req, prompt, new_caches, page_table=new_pt)
+
+        # register freshly-written shareable blocks for future prompts
+        if self._prefix is not None:
+            for j in range(m0, min(m_share, n_need)):
+                self._prefix.put(
+                    blockpool.chain_key(prompt[:(j + 1) * bs]), row[j])
+            if live and (m_share + 1) * bs == plen and m_share < len(row):
+                # divergence entry: valid for COW immediately, but its last
+                # position is only written by this slot's first decode
+                # chunk — mark pending so no one shares it by reference yet
+                key = blockpool.chain_key(prompt)
+                self._prefix.put(key, row[m_share])
+                self._pending_keys.add(key)
+        if not live:
+            # nothing to generate: the slot never occupies, so retire its
+            # reservation now (prefix-registered blocks survive via the
+            # cache's own ref)
+            for bid in self._slot_blocks[i]:
+                self._alloc.decref(bid)
+            self._slot_blocks[i] = []
+            self.state = dataclasses.replace(
+                self.state, page_table=self.state.page_table.at[i].set(0))
+        return True
 
     def _admit(self) -> int:
         n = 0
         for i in range(self.max_batch):
-            if self.slots[i] is None and not self.queue.empty():
-                self._admit_one(i, self.queue.get())
-                n += 1
+            if self.slots[i] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            self.admit_attempts += 1
+            if self.paged:
+                if not self._admit_one_paged(i, req):
+                    self.admit_blocked += 1
+                    break  # FIFO head-of-line: wait for blocks to free
+                self.queue.popleft()
+            else:
+                self.queue.popleft()
+                self._admit_one(i, req)
+            n += 1
         return n
 
     def step(self) -> bool:
         """One chunk cycle: admit, decode N tokens/slot, retire."""
         admitted = self._admit()
         occupied = [i for i, r in enumerate(self.slots) if r is not None]
+        occ = len(occupied)
+        self.peak_active_slots = max(self.peak_active_slots, occ)
         if not occupied:
+            if self.paged and self.queue and admitted == 0:
+                # no live slot can ever free blocks: the head request's
+                # reservation exceeds what the pool can ever grant
+                raise RuntimeError(
+                    f"request {self.queue[0].uid} needs more cache blocks "
+                    f"than the pool can ever free (num_cache_blocks="
+                    f"{self.num_cache_blocks}, block={self.cache_block_size})")
             return admitted > 0
+        self.occupancy_samples.append(occ / self.max_batch)
         t0 = time.perf_counter()
         self.state, toks, valid = self._decode(self.params, self.state)
         toks, valid, alive = jax.device_get(
             (toks, valid, self.state.active))  # THE once-per-chunk sync
         self.decode_syncs += 1
         self.chunk_latencies.append(time.perf_counter() - t0)
+        if self.paged and self._pending_keys:
+            # every pending divergence entry's origin slot just ran its
+            # first decode chunk, writing the entry's last position: promote
+            # to fully shareable
+            self._pending_keys.clear()
         for n in range(toks.shape[0]):
             for i in occupied:
                 if valid[n, i]:
                     self.slots[i].output.append(int(toks[n, i]))
                     self.decode_tokens += 1
+        retired = []
         for i in occupied:
             if not alive[i]:
                 self.slots[i].done = True
                 self.slots[i] = None  # retire -> refillable next boundary
+                retired.append(i)
+        if self.paged and retired:
+            for i in retired:
+                for bid in self._slot_blocks[i]:
+                    self._alloc.decref(bid)
+                self._slot_blocks[i] = []
+            # point retired rows at the null block so their frozen-position
+            # writes stop touching (possibly reissued) pool blocks
+            self.state = dataclasses.replace(
+                self.state,
+                page_table=self.state.page_table
+                .at[jnp.asarray(retired)].set(0))
         return True
 
     def run_to_completion(self, max_ticks: int = 10000):
         ticks = 0
-        while (any(s is not None for s in self.slots)
-               or not self.queue.empty()):
+        while any(s is not None for s in self.slots) or self.queue:
             if not self.step():
                 break
             ticks += 1
@@ -337,7 +661,8 @@ class ServingEngine:
                if lat else 0.0)
         toks = max(1, self.decode_tokens)
         decode_s = sum(self.chunk_latencies)
-        return {
+        occ = self.occupancy_samples
+        out = {
             "decode_chunk": self.decode_chunk,
             "prefill_chunk": self.prefill_chunk,
             "decode_syncs": self.decode_syncs,
@@ -349,4 +674,30 @@ class ServingEngine:
             # decode-only throughput: excludes prefill/admit/compile, so it
             # is the number that isolates a decode-chunk latency cliff
             "decode_tok_s": self.decode_tokens / decode_s if decode_s else 0.0,
+            # cache-pool observability (meaningful for dense too: the HBM
+            # number is what the paged/dense capacity comparison fixes)
+            "paged": self.paged,
+            "cache_hbm_bytes": int(sum(
+                l.nbytes for l in jax.tree.leaves(self.state.caches))),
+            "slot_occupancy": (sum(occ) / len(occ)) if occ else 0.0,
+            "peak_active_slots": self.peak_active_slots,
+            "admit_attempts": self.admit_attempts,
+            "admit_blocked": self.admit_blocked,
+            "admission_blocked_rate": (self.admit_blocked
+                                       / max(1, self.admit_attempts)),
+            "prefill_s": self.prefill_s,
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_tokens_reused": self.prefill_tokens_reused,
         }
+        if self.paged:
+            out["cache_block_size"] = self.cache_block_size
+            out["num_cache_blocks"] = self.num_cache_blocks
+            out["blocks_in_use"] = self._alloc.num_used
+            if self._prefix is not None:
+                out["prefix_cache"] = {
+                    "entries": len(self._prefix),
+                    "hits": self._prefix.hits,
+                    "misses": self._prefix.misses,
+                    "evictions": self._prefix.evictions,
+                }
+        return out

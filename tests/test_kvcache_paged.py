@@ -1,0 +1,195 @@
+"""Cache-layout contracts for the block-paged pool: axis discovery
+(batch/sequence) with keyed-path errors, slot-view round-trips across every
+cache family layout, and the paged gather/scatter pool views."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models import api, kvcache
+
+# hypothesis drives the round-trip property when available (CI installs
+# requirements.txt); otherwise a fixed parametrization covers the same
+# layouts so the contract never goes untested
+try:
+    from hypothesis import given, settings, strategies as st
+    settings.register_profile("ci", max_examples=15, deadline=None)
+    settings.load_profile("ci")
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _cfg(arch):
+    return registry.get_reduced(arch).replace(activation_dtype=jnp.float32,
+                                              quant=None)
+
+
+# ---------------------------------------------------------------------------
+# axis discovery: keyed-path errors
+# ---------------------------------------------------------------------------
+
+def test_batch_axes_error_names_leaf_and_shapes():
+    """An ambiguous probe pair must say WHICH leaf and show BOTH shapes —
+    the old message had neither, making hybrid-layout bugs undebuggable."""
+    a = {"kv": jnp.zeros((2, 1, 8)), "ssm": jnp.zeros((2, 1, 4))}
+    b = {"kv": jnp.zeros((2, 2, 8)), "ssm": jnp.zeros((3, 2, 4))}  # 2 diffs
+    with pytest.raises(ValueError) as ei:
+        kvcache.batch_axes(a, b)
+    msg = str(ei.value)
+    assert "'ssm'" in msg.replace('["ssm"]', "'ssm'")  # key path named
+    assert "(2, 1, 4)" in msg and "(3, 2, 4)" in msg   # both probe shapes
+    assert "2 dims" in msg
+
+
+def test_batch_axes_error_on_zero_diffs():
+    a = {"x": jnp.zeros((2, 4))}
+    with pytest.raises(ValueError, match="0 dims"):
+        kvcache.batch_axes(a, a)
+
+
+def test_seq_axes_zero_diffs_means_unpaged():
+    """Equal shapes across s_cache probes -> -1 (O(1)-per-slot state)."""
+    a = {"conv": jnp.zeros((2, 1, 3, 8)), "kv": jnp.zeros((2, 1, 16, 4))}
+    b = {"conv": jnp.zeros((2, 1, 3, 8)), "kv": jnp.zeros((2, 1, 32, 4))}
+    ax = kvcache.seq_axes(a, b)
+    assert ax == {"conv": -1, "kv": 2}
+
+
+def test_seq_axes_error_keyed():
+    a = {"kv": jnp.zeros((1, 16, 16))}
+    b = {"kv": jnp.zeros((1, 32, 32))}
+    with pytest.raises(ValueError, match=r"kv.*\(1, 16, 16\).*\(1, 32, 32\)"):
+        kvcache.seq_axes(a, b)
+
+
+def test_zamba2_hybrid_layout_axes():
+    """zamba2 hybrid: mamba leaves [n_groups, attn_every, B, ...] carry
+    batch at axis 2 and no sequence axis; shared-attn kv is
+    [n_groups, B, S, KV, hd]; the tail stack is [tail_layers, B, ...]."""
+    cfg = _cfg("zamba2-7b")
+    b1 = jax.eval_shape(lambda: api.init_cache(cfg, 1, 32, dtype=jnp.float32))
+    b2 = jax.eval_shape(lambda: api.init_cache(cfg, 2, 32, dtype=jnp.float32))
+    s2 = jax.eval_shape(lambda: api.init_cache(cfg, 1, 64, dtype=jnp.float32))
+    baxes = kvcache.batch_axes(b1, b2)
+    saxes = kvcache.seq_axes(b1, s2)
+    assert baxes["kv"] == (1, 1) and saxes["kv"] == (2, 2)
+    assert all(ax == 2 for ax in jax.tree.leaves(baxes["mamba"]))
+    assert all(ax == 1 for ax in jax.tree.leaves(baxes["tail"]))
+    for grp in ("mamba", "tail"):
+        assert all(ax == -1 for ax in jax.tree.leaves(saxes[grp]))
+    # pooled leaves keep seq adjacent to batch: the engine's pool contract
+    checks = jax.tree.map(lambda ba, sa: sa in (-1, ba + 1), baxes, saxes)
+    assert all(jax.tree.leaves(checks))
+
+
+# ---------------------------------------------------------------------------
+# slot-view round trip across every cache family layout (hypothesis)
+# ---------------------------------------------------------------------------
+
+def _layout(name, b, s):
+    if name == "attn":
+        return kvcache.attn_cache(2, b, s, 2, 4, jnp.float32)
+    if name == "attn_int8":
+        return kvcache.attn_cache(2, b, s, 2, 4, "int8")
+    if name == "mamba":
+        return kvcache.mamba_cache(2, b, 8, 4, 4)
+    if name == "mamba2":
+        return kvcache.mamba2_cache(2, b, 2, 4, 4, 8, 4)
+    if name == "hybrid":
+        return api.init_cache(_cfg("zamba2-7b"), b, s, dtype=jnp.float32)
+    raise AssertionError(name)
+
+
+LAYOUTS = ["attn", "attn_int8", "mamba", "mamba2", "hybrid"]
+
+
+def _check_roundtrip(name, b, i, seed):
+    """merge_batch(slice_batch(c, i), i) == c for a random-filled cache."""
+    caches = _layout(name, b, 16)
+    rng = np.random.default_rng(seed)
+    caches = jax.tree.map(
+        lambda c: jnp.asarray(
+            rng.integers(-50, 50, c.shape).astype(np.float32)).astype(c.dtype),
+        caches)
+    axes = kvcache.batch_axes(
+        jax.eval_shape(lambda: _layout(name, 1, 16)),
+        jax.eval_shape(lambda: _layout(name, 2, 16)))
+    back = kvcache.merge_batch(caches, kvcache.slice_batch(caches, axes, i),
+                               axes, i)
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), back, caches)
+
+
+if HAVE_HYPOTHESIS:
+    @given(name=st.sampled_from(LAYOUTS), b=st.integers(2, 4),
+           data=st.data())
+    def test_merge_slice_roundtrip_identity(name, b, data):
+        _check_roundtrip(name, b, data.draw(st.integers(0, b - 1)),
+                         data.draw(st.integers(0, 2**31 - 1)))
+else:
+    @pytest.mark.parametrize("name", LAYOUTS)
+    def test_merge_slice_roundtrip_identity(name):
+        for b, i, seed in [(2, 0, 0), (3, 2, 1), (4, 1, 7)]:
+            _check_roundtrip(name, b, i, seed)
+
+
+# ---------------------------------------------------------------------------
+# cache_len on the clamped / int8 variants
+# ---------------------------------------------------------------------------
+
+def test_cache_len_windowed_and_int8():
+    assert kvcache.cache_len(kvcache.attn_cache(2, 1, 128, 2, 4)) == 128
+    # rolling window clamps the stored capacity
+    assert kvcache.cache_len(
+        kvcache.attn_cache(2, 1, 128, 2, 4, window=32)) == 32
+    c = kvcache.attn_cache(2, 1, 64, 2, 4, "int8", window=16)
+    assert kvcache.cache_len(c) == 16
+    assert len(c) == 4 and c[0].dtype == jnp.int8
+
+
+# ---------------------------------------------------------------------------
+# paged pool views
+# ---------------------------------------------------------------------------
+
+def test_paged_scatter_gather_roundtrip():
+    """Values written at logical positions come back at the same positions
+    of the gathered view, through an arbitrary block permutation."""
+    nb_pool, bs, f = 7, 4, 3
+    pool = jnp.zeros((nb_pool, bs, f))
+    table = jnp.asarray([[5, 2, 6], [1, 4, 3]], jnp.int32)  # [B=2, nb=3]
+    pos = jnp.asarray([[0, 5, 11], [3, 4, 10]], jnp.int32)
+    vals = jnp.arange(2 * 3 * f, dtype=jnp.float32).reshape(2, 3, f) + 1
+    pool = kvcache.paged_scatter(pool, vals, table, pos)
+    view = kvcache.paged_gather(pool, table)
+    assert view.shape == (2, 12, f)
+    for i in range(2):
+        for j in range(3):
+            np.testing.assert_array_equal(
+                np.asarray(view[i, int(pos[i, j])]), np.asarray(vals[i, j]))
+
+
+def test_paged_scatter_oob_goes_to_null_block():
+    """Positions past the table's reach must land in the null block, NOT
+    alias the last real block via index clamping (padded prefill tails)."""
+    pool = jnp.zeros((4, 2, 1))
+    table = jnp.asarray([[3, 2]], jnp.int32)        # reach = 4 positions
+    pos = jnp.asarray([[1, 4, 7]], jnp.int32)       # 4 and 7 are OOB
+    vals = jnp.ones((1, 3, 1))
+    out = kvcache.paged_scatter(pool, vals, table, pos)
+    assert float(out[3, 1, 0]) == 1.0               # in-range write landed
+    assert not np.asarray(out[2]).any()             # real blocks untouched
+    assert np.asarray(out[0]).any()                 # junk absorbed by null
+
+
+def test_null_block_rows_share_storage_semantics():
+    """An all-null table row gathers a view made entirely of block 0 — the
+    masked-softmax guarantee (exactly-zero probs beyond valid length) is
+    what makes reading it safe; here we just pin the routing."""
+    pool = jnp.arange(3 * 2 * 1, dtype=jnp.float32).reshape(3, 2, 1)
+    view = kvcache.paged_gather(pool, jnp.zeros((1, 3), jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(view[0]).ravel(),
+        np.tile(np.asarray(pool[0]).ravel(), 3))

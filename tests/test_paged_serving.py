@@ -1,0 +1,186 @@
+"""Block-paged serving engine: bit-exact parity with the dense engine
+across cache families (attention, int8 attention, SSM, hybrid), shared-
+prefix reuse (reference sharing + copy-on-write), and admission blocking
+under a constrained pool."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models import api
+from repro.serving.engine import Request, ServingEngine
+
+
+def _cfg(arch="tinyllama-1.1b", **over):
+    return registry.get_reduced(arch).replace(
+        activation_dtype=jnp.float32, **over)
+
+
+@pytest.fixture(scope="module")
+def tl():
+    cfg = _cfg()
+    params = api.init_params(jax.random.key(0), cfg, serve_quantized=True)
+    return cfg, params
+
+
+def _run(cfg, params, prompts, n_new, *, temperature=0.0, seed=0, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("prefill_chunk", 4)
+    eng = ServingEngine(cfg, params, seed=seed, **kw)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=n,
+                    temperature=temperature, top_k=5 if temperature else 0)
+            for i, (p, n) in enumerate(zip(prompts, n_new))]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    assert all(r.done for r in reqs)
+    return eng, [r.output for r in reqs]
+
+
+def _ragged(cfg, rng, plens=(5, 8, 11, 3, 6)):
+    return [rng.integers(0, cfg.vocab_size, p, dtype=np.int32)
+            for p in plens]
+
+
+# ---------------------------------------------------------------------------
+# paged == dense, bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("decode_chunk", [1, 8])
+def test_paged_matches_dense_greedy(tl, decode_chunk):
+    """5 ragged requests > 2 slots (mid-stream retire/refill): the paged
+    engine's greedy output is bit-identical to the dense engine's, at both
+    sync-every-token and chunked decode."""
+    cfg, params = tl
+    prompts = _ragged(cfg, np.random.default_rng(0))
+    n_new = [4, 6, 3, 5, 4]
+    _, dense = _run(cfg, params, prompts, n_new, decode_chunk=decode_chunk)
+    _, paged = _run(cfg, params, prompts, n_new, decode_chunk=decode_chunk,
+                    cache_block_size=8)
+    assert paged == dense
+
+
+def test_paged_matches_dense_sampled(tl):
+    """Same PRNG seed + same admission order => the sampled streams are
+    bit-identical too (sampling consumes logits that must match exactly)."""
+    cfg, params = tl
+    prompts = _ragged(cfg, np.random.default_rng(1))
+    n_new = [4, 6, 3, 5, 4]
+    _, dense = _run(cfg, params, prompts, n_new, decode_chunk=8,
+                    temperature=1.3, seed=11)
+    _, paged = _run(cfg, params, prompts, n_new, decode_chunk=8,
+                    temperature=1.3, seed=11, cache_block_size=8)
+    assert paged == dense
+
+
+def test_paged_matches_dense_int8_kv(tl):
+    """int8 KV pool (4-leaf: codes + per-(pos, head) scales) pages all four
+    leaves through the same table and stays bit-exact vs dense int8."""
+    cfg, params = tl
+    cfg = cfg.replace(kv_cache_dtype="int8")
+    prompts = _ragged(cfg, np.random.default_rng(2), (5, 9, 12))
+    _, dense = _run(cfg, params, prompts, [4, 5, 4], decode_chunk=4)
+    _, paged = _run(cfg, params, prompts, [4, 5, 4], decode_chunk=4,
+                    cache_block_size=8)
+    assert paged == dense
+
+
+@pytest.mark.parametrize("arch", ["falcon-mamba-7b", "zamba2-7b"])
+def test_paged_matches_dense_ssm_and_hybrid(arch):
+    """Pure-SSM caches have no sequence axis (nothing pooled); hybrid
+    stacks mix pooled attention KV with slot-resident mamba state. Both
+    must stay bit-exact under paging."""
+    cfg = _cfg(arch)
+    params = api.init_params(jax.random.key(0), cfg, serve_quantized=True)
+    prompts = _ragged(cfg, np.random.default_rng(3), (6, 9, 5))
+    _, dense = _run(cfg, params, prompts, [4, 4, 4], decode_chunk=4)
+    _, paged = _run(cfg, params, prompts, [4, 4, 4], decode_chunk=4,
+                    cache_block_size=8)
+    assert paged == dense
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix reuse
+# ---------------------------------------------------------------------------
+
+def test_prefix_fanout_skips_prefill_and_stays_exact(tl):
+    """One 32-token system prompt (4 full blocks) fanned out over 6
+    requests with distinct 1-token suffixes: followers reuse the shared
+    blocks by reference, cutting prefill dispatches, with identical
+    output."""
+    cfg, params = tl
+    rng = np.random.default_rng(4)
+    sys_p = rng.integers(0, cfg.vocab_size, 32, dtype=np.int32)
+    prompts = [np.concatenate([sys_p, [i]]).astype(np.int32)
+               for i in range(6)]
+    e0, base = _run(cfg, params, prompts, [4] * 6, cache_block_size=8)
+    e1, shared = _run(cfg, params, prompts, [4] * 6, cache_block_size=8,
+                      prefix_cache=True)
+    assert shared == base
+    s0, s1 = e0.stats(), e1.stats()
+    assert s1["prefill_dispatches"] < s0["prefill_dispatches"] / 2
+    assert s1["prefill_tokens_reused"] > 0
+    assert s1["prefix_cache"]["hits"] > 0
+
+
+def test_prefix_cow_identical_prompts(tl):
+    """Identical prompts whose length is an exact block multiple: the
+    divergence block is copy-on-write (decode rewrites its last position in
+    a private copy), so outputs still match the dense engine exactly."""
+    cfg, params = tl
+    rng = np.random.default_rng(5)
+    p = rng.integers(0, cfg.vocab_size, 32, dtype=np.int32)  # 4 * bs
+    prompts = [p.copy() for _ in range(4)]
+    _, dense = _run(cfg, params, prompts, [4] * 4)
+    e, cow = _run(cfg, params, prompts, [4] * 4, cache_block_size=8,
+                  prefix_cache=True)
+    assert cow == dense
+    assert e.stats()["prefix_cache"]["hits"] > 0
+
+
+def test_prefix_disabled_for_slot_resident_state():
+    """Hybrid stacks hold slot-resident mamba state that cannot fan out by
+    block reference: asking for prefix caching warns and disables it."""
+    cfg = _cfg("zamba2-7b")
+    params = api.init_params(jax.random.key(0), cfg, serve_quantized=True)
+    with pytest.warns(UserWarning, match="prefix caching"):
+        eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                            cache_block_size=8, prefix_cache=True)
+    assert not eng.prefix_caching
+
+
+# ---------------------------------------------------------------------------
+# admission blocking / pool accounting
+# ---------------------------------------------------------------------------
+
+def test_blocked_admission_defers_then_completes(tl):
+    """A pool that can only hold one reservation at a time serializes
+    admissions through blocked attempts — every request still completes
+    with its full budget, bit-exact vs dense."""
+    cfg, params = tl
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, 20, dtype=np.int32)
+               for _ in range(3)]
+    # need = ceil((20+40)/8) = 8 blocks = the whole usable pool
+    eng, out = _run(cfg, params, prompts, [40] * 3, decode_chunk=4,
+                    cache_block_size=8, num_cache_blocks=9)
+    assert all(len(o) == 40 for o in out)
+    st = eng.stats()
+    assert st["admit_blocked"] > 0
+    assert st["admission_blocked_rate"] > 0
+    assert st["blocks_in_use"] == 0  # everything retired back to the pool
+    _, dense = _run(cfg, params, prompts, [40] * 3, decode_chunk=4)
+    assert out == dense
+
+
+def test_infeasible_reservation_raises(tl):
+    cfg, params = tl
+    with pytest.raises(ValueError, match="cache_block_size"):
+        ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                      cache_block_size=7)  # does not divide max_seq
+    with pytest.raises(ValueError, match="num_cache_blocks"):
+        ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                      cache_block_size=8, num_cache_blocks=4)
