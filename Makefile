@@ -4,7 +4,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: install test test-fast bench-smoke bench-serving bench-autotune
+.PHONY: install test test-fast bench-smoke bench-serving bench-autotune \
+	bench-distributed
 
 install:
 	$(PYTHON) -m pip install -r requirements.txt
@@ -29,3 +30,7 @@ bench-serving:   ## serving-engine perf (chunked vs per-tick decode) -> JSON
 bench-autotune:  ## measured-time kernel tuner vs LMMA heuristic -> JSON
 	$(PYTHON) benchmarks/bench_autotune.py --cache .tuning_cache.json \
 		--out BENCH_autotune.json
+
+bench-distributed: ## tensor-parallel sharded decode vs dense -> JSON
+	$(PYTHON) benchmarks/bench_distributed.py --mesh 2x4 \
+		--out BENCH_distributed.json

@@ -1,7 +1,11 @@
 """Shared quant defaults: the paper's technique as configured per arch.
 
 ``LUT_W2`` is the paper-faithful serve config (2-bit symmetric weights on the
-odd grid, INT8 per-row-quantized tables, K=4 groups, XLA LUT path). Training
+odd grid, K=4 groups, XLA LUT path). ``table_quant="auto"`` resolves per
+backend (``core.mpgemm.resolve_table_quant``): the paper's INT8 per-row
+tables where an int8 GEMM fast path exists (TPU MXU / the LUT unit's int8
+datapath), float tables on CPU emulation where quantizing the table costs
+both ops and accuracy. Pin ``"per_row"`` to force the paper format. Training
 steps add ``qat=True`` (STE fake-quant forward, paper §5).
 """
 
@@ -9,7 +13,7 @@ LUT_W2 = {
     "weight_bits": 2,
     "scheme": "symmetric",
     "mpgemm_mode": "lut_xla",
-    "table_quant": "per_row",
+    "table_quant": "auto",
     "k_group": 4,
 }
 

@@ -442,10 +442,15 @@ def collect_qw_shapes(params) -> List:
 
     def walk(node):
         if isinstance(node, QuantizedWeight):
-            if node.packed.ndim == 3:  # vmap-batched experts -> slice one
+            if node.packed is None:
+                return  # offline-CW store: no packed planes to tile-tune
+            if node.packed.ndim > 2:
+                # vmap-batched (stacked layers / experts, possibly nested):
+                # every slice shares the shape, so tune on the first one
+                ix = (0,) * (node.packed.ndim - 2)
                 node = QuantizedWeight(
-                    node.packed[0], node.scale[0],
-                    None if node.zero_prime is None else node.zero_prime[0],
+                    node.packed[ix], node.scale[ix],
+                    None if node.zero_prime is None else node.zero_prime[ix],
                     node.plane_scales, bits=node.bits, k_group=node.k_group,
                     k_total=node.k_total, n=node.n)
             sig = (node.n, node.k_total, node.k_group, node.num_planes)
@@ -464,22 +469,46 @@ def collect_qw_shapes(params) -> List:
     return found
 
 
+def _local_slice(qw, mp: int):
+    """The [n/mp, bytes] shard of a packed weight one model-parallel device
+    holds — what its mpGEMM actually runs, hence what must be measured."""
+    from repro.core.quantize import QuantizedWeight
+    if mp <= 1 or qw.n % mp:
+        return qw
+    nl = qw.n // mp
+    return QuantizedWeight(
+        qw.packed[:nl], qw.scale[:nl],
+        None if qw.zero_prime is None else qw.zero_prime[:nl],
+        qw.plane_scales, bits=qw.bits, k_group=qw.k_group,
+        k_total=qw.k_total, n=nl)
+
+
 def pretune_params(params, ms: Sequence[int], *,
                    cache: Optional[TuningCache] = None,
                    table_quant: Optional[str] = "per_row",
-                   repeats: int = 2, max_candidates: int = 4,
+                   plan=None, repeats: int = 2, max_candidates: int = 4,
                    skip_cached: bool = True, verbose: bool = False) -> int:
     """Tune every (M, projection-shape) pair a serving config will dispatch.
 
     ``ms`` is the list of M values the engine emits (decode: max_batch;
-    prefill: prefill_chunk). Returns the number of shapes tuned; entries
-    already in the cache are skipped unless ``skip_cached=False``. Call
-    ``cache.save()`` afterwards to persist.
+    prefill: prefill_chunk). Under an AxisPlan the tuned unit is the
+    PER-SHARD tile: each qw is sliced to the [n/mp] rows one model-parallel
+    device holds and M is divided over the batch axis, producing cache
+    entries keyed by the local shapes ``kernels.ops.resolve_dispatch``
+    looks up at trace time inside a ``plan_scope``. Returns the number of
+    shapes tuned; entries already in the cache are skipped unless
+    ``skip_cached=False``. Call ``cache.save()`` afterwards to persist.
     """
     cache = cache if cache is not None else get_active()
+    mp = dp = 1
+    if plan is not None:
+        mp, dp = plan.axis_size("model"), plan.axis_size("batch")
     tuned = 0
     for qw in collect_qw_shapes(params):
+        qw = _local_slice(qw, mp)
         for m in ms:
+            if dp > 1 and m % dp == 0:
+                m //= dp
             key = shape_key(m, qw.n, qw.g, qw.k_group, qw.num_planes,
                             table_quant=table_quant)
             if skip_cached and cache is not None and key in cache.entries:

@@ -34,7 +34,8 @@ import jax.numpy as jnp
 from .quantize import QuantizedWeight, dequantize
 from .table import Table, precompute_table
 
-__all__ = ["mpgemm", "precompute_tables", "MPGEMM_MODES", "FUSION_MODES"]
+__all__ = ["mpgemm", "precompute_tables", "resolve_table_quant",
+           "MPGEMM_MODES", "FUSION_MODES"]
 
 MPGEMM_MODES = ("fp16", "dequant", "lut_xla", "lut_pallas")
 # lut_pallas precompute placement (owned here, next to the mode it modifies,
@@ -44,8 +45,23 @@ MPGEMM_MODES = ("fp16", "dequant", "lut_xla", "lut_pallas")
 FUSION_MODES = ("auto", "fused", "staged", "tuned")
 
 
+def resolve_table_quant(table_quant: Optional[str]) -> Optional[str]:
+    """Map the ``"auto"`` table-precision knob to a concrete mode.
+
+    Per-row INT8 tables are the paper's format — they feed an int8 MXU (or
+    the LUT unit's int8 datapath) and halve table bytes. On backends
+    without an int8 GEMM fast path (CPU emulation), quantizing the table
+    costs extra ops AND accuracy, so ``"auto"`` resolves to float tables
+    there. Explicit ``"per_row"``/``"per_group"``/``None`` pass through.
+    """
+    if table_quant == "auto":
+        return "per_row" if jax.default_backend() == "tpu" else None
+    return table_quant
+
+
 def precompute_tables(x, k_group: int = 4, table_quant: Optional[str] = "per_row") -> Table:
     """Independent table-precompute operator (fuse me with your previous op)."""
+    table_quant = resolve_table_quant(table_quant)
     lead = x.shape[:-1]
     t = precompute_table(x.reshape(-1, x.shape[-1]), k_group, table_quant)
     del lead  # table stays flat [M, G, E]; mpgemm reshapes the output
@@ -88,6 +104,7 @@ def mpgemm(
     """
     if mode not in MPGEMM_MODES:
         raise ValueError(f"mode {mode!r} not in {MPGEMM_MODES}")
+    table_quant = resolve_table_quant(table_quant)
     if x.shape[-1] != qw.k_total:
         raise ValueError(f"contract dim {x.shape[-1]} != k_total {qw.k_total}")
     out_dtype = out_dtype or x.dtype

@@ -41,7 +41,7 @@ __all__ = [
 ]
 
 
-@jax.tree_util.register_pytree_node_class
+@jax.tree_util.register_pytree_with_keys_class
 class QuantizedWeight:
     """Pytree container for packed low-bit weights (see module docstring)."""
 
@@ -61,6 +61,19 @@ class QuantizedWeight:
         self.n = int(n)
 
     # -- pytree protocol ----------------------------------------------------
+    # Keyed flattening so tree_flatten_with_path yields NAMED child paths
+    # (".../qw/packed", ".../qw/scale", ...) — the sharding-rule regexes in
+    # distributed/sharding.py match on these names; with anonymous
+    # flattening the paths were numeric indices and no packed-weight rule
+    # could ever fire.
+    def tree_flatten_with_keys(self):
+        children = ((jax.tree_util.GetAttrKey("packed"), self.packed),
+                    (jax.tree_util.GetAttrKey("scale"), self.scale),
+                    (jax.tree_util.GetAttrKey("zero_prime"), self.zero_prime),
+                    (jax.tree_util.GetAttrKey("cw"), self.cw))
+        aux = (self.plane_scales, self.bits, self.k_group, self.k_total, self.n)
+        return children, aux
+
     def tree_flatten(self):
         children = (self.packed, self.scale, self.zero_prime, self.cw)
         aux = (self.plane_scales, self.bits, self.k_group, self.k_total, self.n)
@@ -100,14 +113,32 @@ def _pack_planes(planes, k_group):
 
 
 def quantize_symmetric(w: jax.Array, bits: int, k_group: int = 4) -> QuantizedWeight:
-    """Absmax symmetric quantization onto the odd grid {±1, ±3, ...}·s'.
+    """MSE-optimal symmetric quantization onto the odd grid {±1, ±3, ...}·s'.
 
-    w: float [N, K] (output-major). z' = 0 by construction.
+    w: float [N, K] (output-major). z' = 0 by construction. The per-row
+    scale is not plain absmax: a per-row grid search over clip ratios
+    r·absmax/qmax (r ∈ [0.6, 1.0], the AWQ/TensorRT-LLM recipe) picks the
+    scale minimizing squared reconstruction error — clipping a heavy-tailed
+    row's outliers buys a finer grid for the bulk of its mass. Every scale
+    on the grid keeps the odd-grid invariant (dequant/scale ratios are odd
+    integers ≤ 2^bits − 1), so kernels and tests are agnostic to the
+    choice; end-to-end it is what keeps deep stacks with shared quantized
+    blocks (zamba2-style) faithful at W4.
     """
     n, k = w.shape
     wf = w.astype(jnp.float32)
     qmax = (1 << bits) - 1
-    s_prime = jnp.maximum(jnp.max(jnp.abs(wf), axis=1), 1e-30) / qmax  # [N]
+    absmax = jnp.maximum(jnp.max(jnp.abs(wf), axis=1), 1e-30)  # [N]
+    ratios = jnp.linspace(0.6, 1.0, 17)
+
+    def _recon_err(r):
+        s = absmax * r / qmax
+        qr = jnp.clip(jnp.round((wf / s[:, None] + qmax) / 2.0), 0, qmax)
+        wr = s[:, None] * (2.0 * qr - qmax)
+        return jnp.sum(jnp.square(wf - wr), axis=1)  # [N]
+
+    errs = jax.vmap(_recon_err)(ratios)              # [R, N]
+    s_prime = absmax * ratios[jnp.argmin(errs, axis=0)] / qmax
     q = jnp.clip(jnp.round((wf / s_prime[:, None] + qmax) / 2.0), 0, qmax)
     planes = reinterpret.codes_to_sign_planes(q.astype(jnp.uint8), bits)
     return QuantizedWeight(

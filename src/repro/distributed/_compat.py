@@ -1,0 +1,47 @@
+"""jax version compatibility for the distributed layer.
+
+The distributed code targets the current jax API (``jax.shard_map`` with
+``check_vma``, ``jax.sharding.AxisType``); older jax (0.4.x, the pinned CI
+toolchain) exposes the same functionality under
+``jax.experimental.shard_map.shard_map(..., check_rep=...)`` and has no
+axis-type concept. This module is the single place that bridges the gap —
+the same pattern as ``kernels/_compat.py`` for Pallas CompilerParams.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "HAS_AXIS_TYPE"]
+
+try:  # jax >= 0.5: AxisType exists and make_mesh takes axis_types
+    from jax.sharding import AxisType  # noqa: F401
+    HAS_AXIS_TYPE = True
+except ImportError:
+    AxisType = None
+    HAS_AXIS_TYPE = False
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` on current jax; the experimental one on 0.4.x.
+
+    ``check_vma`` maps onto the old API's ``check_rep`` — both toggle the
+    replication/varying-manual-axes check that rejects collectives whose
+    replication the tracer cannot prove (our pipeline/flash-decode bodies
+    legitimately mix per-shard and replicated values, so callers pass
+    False).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    if HAS_AXIS_TYPE:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)

@@ -19,12 +19,19 @@ from repro.distributed.sharding import current_plan
 
 
 def sp_scatter(x):
-    """Enter an SP region: shard the sequence dim (axis 1) over data."""
+    """Enter an SP region: shard the sequence dim (axis 1) over data.
+
+    When the sequence axis IS one of the batch axes (the default plan maps
+    both to "data"), the batch dim stays unsharded inside the SP region — a
+    mesh axis may appear at most once in a PartitionSpec, and SP spends the
+    data axis on the sequence dim precisely because long-prefill batches
+    are too small to fill it."""
     plan = current_plan()
     if plan is None or plan.seq is None:
         return x
     spec = [None] * x.ndim
-    spec[0] = plan.resolve("batch")
+    if plan.seq not in plan.batch:
+        spec[0] = plan.resolve("batch")
     spec[1] = plan.seq
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(plan.mesh, P(*spec)))

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed._compat import shard_map
+
 __all__ = ["pipelined_forward", "split_stages"]
 
 
@@ -79,7 +81,7 @@ def pipelined_forward(
         return buf
 
     spec_p = jax.tree.map(lambda _: P(pp_axis), staged_params)
-    fn = jax.shard_map(
+    fn = shard_map(
         per_stage, mesh=mesh,
         in_specs=(spec_p, P()), out_specs=P(),
         check_vma=False)

@@ -7,6 +7,7 @@ to logical specs which an :class:`AxisPlan` maps onto physical mesh axes.
 Physical meshes (launch/mesh.py):
   single-pod (16, 16)      axes ("data", "model")
   multi-pod  (2, 16, 16)   axes ("pod", "data", "model")
+  serving    (data, model) over however many devices the host exposes
 
 The plan maps logical -> physical:
   batch   -> ("pod", "data")   (pod composes with data for all batch ops)
@@ -15,12 +16,20 @@ The plan maps logical -> physical:
   fsdp    -> "data"            (ZeRO-3 parameter sharding over data)
   seq     -> "data"            (sequence parallelism for long prefill)
   stage   -> "pp"              (pipeline axis when a 3D (pp,...) mesh is used)
+
+Packed low-bit weights (core/quantize.QuantizedWeight) flatten with named
+child paths (".../qw/packed" etc.), and their rules mirror the float ones:
+a column-parallel float weight [K, N] sharded ("fsdp", "model") becomes a
+packed plane [N, ceil(K·B/8)] sharded ("model", None) — the quantizer packs
+output-major — while a row-parallel weight shards the byte dim, which is
+only legal on bit-group boundaries (see :func:`resolve_physical_spec`).
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 import re
 import threading
 from typing import Optional, Tuple
@@ -30,7 +39,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["AxisPlan", "plan_scope", "current_plan", "shard",
            "param_spec_tree", "named_sharding_tree", "constrain_tree",
-           "DEFAULT_RULES"]
+           "resolve_physical_spec", "packed_group_bytes", "DEFAULT_RULES"]
 
 _state = threading.local()
 
@@ -51,6 +60,16 @@ class AxisPlan:
         if logical == "batch":
             return self.batch if len(self.batch) > 1 else self.batch[0]
         return getattr(self, logical)
+
+    def axis_size(self, logical: Optional[str]) -> int:
+        """Number of shards the resolved physical axis produces (1 = off)."""
+        ax = self.resolve(logical)
+        if ax is None:
+            return 1
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        if isinstance(ax, str):
+            return sizes[ax]
+        return int(math.prod(sizes[a] for a in ax))
 
 
 @contextlib.contextmanager
@@ -99,12 +118,28 @@ def shard(x, *logical_axes):
 # Param paths look like "layers/attn/wq/w", "layers/moe/experts/up", etc.
 # Stacked layer params have a leading L dim -> logical None prepended
 # automatically when the rule has one fewer axis than the array rank.
+#
+# Quantized leaves: QuantizedWeight flattens to named children, so packed
+# serving trees yield paths "layers/attn/wq/qw/packed" / ".../qw/scale" /
+# ".../qw/zero_prime" / ".../qw/cw". packed is uint8 [N, ceil(K·B/8)] with
+# N = d_out (the quantizer consumes w.T), scale/zero_prime are [N], and cw
+# is the offline combined-lookup matrix [G·E, N] (group-major rows, so a
+# K-shard is a contiguous row block).
+#
+# Every parameter leaf MUST match a rule: there is deliberately no ".*"
+# catch-all, and an unmatched leaf raises with its key path (same style as
+# the kvcache.batch_axes keyed errors) — a silently replicated 72B-scale
+# weight is a perf bug that otherwise only shows up as OOM much later.
 # ---------------------------------------------------------------------------
 
 DEFAULT_RULES = [
-    # embeddings / lm head: vocab sharded over model axis
+    # embeddings / positional tables / lm head: vocab sharded over model axis
     (r"embed/table$", ("model", "fsdp")),
+    (r"pos_embed$", (None, None)),
     (r"lm_head/w$", ("fsdp", "model")),
+    (r"lm_head/qw/packed$", ("model", None)),
+    (r"lm_head/qw/(scale|zero_prime)$", ("model",)),
+    (r"lm_head/qw/cw$", (None, "model")),
     # attention projections: column-parallel qkv, row-parallel o
     (r"(attn|xattn|shared_attn)/wq/w$", ("fsdp", "model")),
     (r"(attn|xattn|shared_attn)/wk/w$", ("fsdp", "model")),
@@ -119,6 +154,9 @@ DEFAULT_RULES = [
     # MoE: experts dim over expert axis, then like mlp
     (r"experts/(gate|up)$", ("expert", "fsdp", None)),
     (r"experts/down$", ("expert", None, "fsdp")),
+    (r"experts/(gate|up|down)_qw/packed$", ("expert", None, None)),
+    (r"experts/(gate|up|down)_qw/(scale|zero_prime)$", ("expert", None)),
+    (r"experts/(gate|up|down)_qw/cw$", ("expert", None, None)),
     (r"router/w$", (None, "expert")),
     # mamba: d_inner sharded over model
     (r"ssm/in_proj/w$", ("fsdp", "model")),
@@ -126,18 +164,40 @@ DEFAULT_RULES = [
     (r"ssm/(x_proj|dt_proj)/w$", ("model", None)),
     (r"ssm/dt_proj/b$", (None,)),
     (r"ssm/(conv_w)$", (None, "model")),
-    (r"ssm/(conv_b|A_log|D|dt_bias)$", ("model",)),
-    # quantized linears (serving): packed is [N(out), bytes]
-    (r"(wq|wk|wv|gate|up)/qw/(packed|scale|zero_prime)", ("model",)),
-    (r"(wo|down)/qw/packed$", (None, "model")),
-    (r"(wo|down)/qw/(scale|zero_prime)$", (None,)),
-    (r"lm_head/qw/(packed|scale|zero_prime)", ("model",)),
-    # norms / small vectors replicated
-    (r".*", (None,)),
+    (r"ssm/(conv_b|A_log|D|dt_bias|norm_g)$", ("model",)),
+    # quantized linears (serving): packed is [N(out), ceil(K·B/8)].
+    # column-parallel (the float weight sharded its OUT dim over model):
+    (r"(/|^)(wq|wk|wv|gate|up|in_proj)/qw/packed$", ("model", None)),
+    (r"(/|^)(wq|wk|wv|gate|up|in_proj)/qw/(scale|zero_prime)$", ("model",)),
+    (r"(/|^)(wq|wk|wv|gate|up|in_proj)/qw/cw$", (None, "model")),
+    # row-parallel (the float weight sharded its IN dim over model): shard
+    # the byte dim — legal only on bit-group boundaries, enforced by
+    # resolve_physical_spec. x_proj/dt_proj read the model-sharded d_inner.
+    (r"(/|^)(wo|down|out_proj|x_proj|dt_proj)/qw/packed$", (None, "model")),
+    (r"(/|^)(wo|down|out_proj|x_proj|dt_proj)/qw/(scale|zero_prime)$", (None,)),
+    (r"(/|^)(wo|down|out_proj|x_proj|dt_proj)/qw/cw$", ("model", None)),
+    # norms / gates / small vectors replicated
+    (r"norm/(g|b)$", (None,)),
+    (r"gate_(attn|mlp)$", (None,)),
+    (r"/b$", (None,)),
 ]
 
 
-def _spec_for(path: str, shape, rules) -> Tuple[Optional[str], ...]:
+def _key_str(k) -> str:
+    # DictKey -> .key, SequenceKey -> .idx, GetAttrKey (QuantizedWeight
+    # children) -> .name, FlattenedIndexKey -> .key
+    for attr in ("key", "name", "idx"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+def _path_str(path) -> str:
+    return "/".join(_key_str(k) for k in path)
+
+
+def _spec_for(path: str, shape, rules) -> Optional[Tuple[Optional[str], ...]]:
+    """Logical spec for a leaf, or None when no rule matches."""
     for pat, spec in rules:
         if re.search(pat, path):
             spec = tuple(spec)
@@ -145,43 +205,108 @@ def _spec_for(path: str, shape, rules) -> Tuple[Optional[str], ...]:
                 spec = (None,) * (len(shape) - len(spec)) + spec
             elif len(spec) > len(shape):
                 spec = spec[-len(shape):] if len(shape) else ()
-            # never shard a dim that isn't divisible — fall back to replicate
             return spec
-    return (None,) * len(shape)
+    return None
+
+
+def _spec_leaves(params, rules):
+    """[(path, leaf, logical_spec)] for every leaf; raises listing every
+    unmatched leaf by key path."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out, unmatched = [], []
+    for path, leaf in flat:
+        pstr = _path_str(path)
+        spec = _spec_for(pstr, getattr(leaf, "shape", ()), rules)
+        if spec is None:
+            unmatched.append(jax.tree_util.keystr(path))
+        out.append((path, leaf, spec))
+    if unmatched:
+        raise ValueError(
+            "no sharding rule matched these parameter leaves (add a rule or "
+            "an explicit replicate entry): " + ", ".join(unmatched))
+    return out, treedef
 
 
 def param_spec_tree(params, rules=None):
     """Pytree of logical specs (tuples of logical axis names) for params."""
-    rules = rules or DEFAULT_RULES
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    specs = []
-    for path, leaf in flat:
-        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        specs.append(_spec_for(pstr, getattr(leaf, "shape", ()), rules))
-    return jax.tree_util.tree_unflatten(treedef, specs)
+    leaves, treedef = _spec_leaves(params, rules or DEFAULT_RULES)
+    return jax.tree_util.tree_unflatten(treedef, [s for _, _, s in leaves])
+
+
+def packed_group_bytes(qw) -> int:
+    """Bytes one k-group occupies in a packed plane row — the granularity
+    below which the byte dim of ``packed`` must never be split."""
+    g = max(1, qw.k_total // qw.k_group)
+    last = qw.packed.shape[-1] if qw.packed is not None else 0
+    return max(1, last // g) if last % g == 0 and last else 1
+
+
+def resolve_physical_spec(shape, phys_axes, axis_sizes,
+                          *, last_dim_align: int = 1):
+    """Pure resolver: per-dim physical axis names -> a legal PartitionSpec
+    tuple for ``shape``.
+
+    A dim is replicated (None) when its mesh axis does not evenly divide
+    it.  ``last_dim_align`` additionally requires the per-shard extent of
+    the FINAL dim to be a multiple of the given alignment — used for packed
+    low-bit planes, where a byte-dim shard boundary inside a bit-group
+    would split a group code across devices (the never-mid-byte /
+    never-mid-group rule).  GSPMD shardings are layout-only, so falling
+    back to replication is always semantics-preserving.
+    """
+    out = []
+    ndim = len(shape)
+    for i, (dim, ax) in enumerate(zip(shape, phys_axes)):
+        if ax is None:
+            out.append(None)
+            continue
+        if isinstance(ax, str):
+            size = axis_sizes[ax]
+        else:
+            size = int(math.prod(axis_sizes[a] for a in ax))
+        if size <= 0 or dim % size != 0:
+            out.append(None)
+            continue
+        if i == ndim - 1 and last_dim_align > 1 and \
+                (dim // size) % last_dim_align != 0:
+            out.append(None)
+            continue
+        out.append(ax)
+    return tuple(out)
+
+
+def _packed_align_map(params):
+    """path-prefix (of the qw node) -> group-byte alignment, from a pre-walk
+    over QuantizedWeight nodes (their static metadata is invisible once the
+    tree is flattened to array leaves)."""
+    from repro.core.quantize import QuantizedWeight
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, QuantizedWeight))
+    return {_path_str(path): packed_group_bytes(leaf)
+            for path, leaf in flat if isinstance(leaf, QuantizedWeight)}
 
 
 def named_sharding_tree(params, plan: AxisPlan, rules=None):
-    """Pytree of NamedSharding for params under the plan (divisibility-safe:
-    any dim that does not divide by its mesh axis size is replicated)."""
-    rules = rules or DEFAULT_RULES
+    """Pytree of NamedSharding for params under the plan.
+
+    Divisibility-safe: any dim that does not divide by its mesh axis size is
+    replicated, and the byte dim of a packed plane is only sharded when
+    every shard covers whole bit-groups (see :func:`resolve_physical_spec`).
+    """
     mesh = plan.mesh
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    align = _packed_align_map(params)
 
-    def to_sharding(path, leaf):
-        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        logical = _spec_for(pstr, getattr(leaf, "shape", ()), rules)
-        phys = []
-        for dim, l in zip(getattr(leaf, "shape", ()), logical):
-            ax = plan.resolve(l)
-            if ax is None:
-                phys.append(None)
-                continue
-            size = (axis_sizes[ax] if isinstance(ax, str)
-                    else int(__import__("math").prod(axis_sizes[a] for a in ax)))
-            phys.append(ax if dim % size == 0 else None)
-        return NamedSharding(mesh, P(*phys))
-
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    return jax.tree_util.tree_unflatten(
-        treedef, [to_sharding(p, l) for p, l in flat])
+    leaves, treedef = _spec_leaves(params, rules or DEFAULT_RULES)
+    out = []
+    for path, leaf, logical in leaves:
+        pstr = _path_str(path)
+        last_align = 1
+        if pstr.endswith("/packed"):
+            last_align = align.get(pstr[:-len("/packed")], 1)
+        phys = resolve_physical_spec(
+            getattr(leaf, "shape", ()),
+            [plan.resolve(l) for l in logical],
+            axis_sizes, last_dim_align=last_align)
+        out.append(NamedSharding(mesh, P(*phys)))
+    return jax.tree_util.tree_unflatten(treedef, out)

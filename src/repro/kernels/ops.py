@@ -29,7 +29,7 @@ from repro.core.mpgemm import FUSION_MODES
 
 __all__ = ["table_precompute", "lut_mpgemm", "fused_lut_mpgemm",
            "dequant_mpgemm", "pick_blocks", "auto_fusion", "resolve_dispatch",
-           "FUSION_MODES"]
+           "plan_local_shape", "FUSION_MODES"]
 
 
 def _pad_to(x, mult, axis):
@@ -98,6 +98,30 @@ def auto_fusion(m, n, g, k_group, planes,
     return select_fusion(desc, TileSchedule(bm, bn, bg, 0, 0, 0, 0))
 
 
+def plan_local_shape(m, n):
+    """Per-shard (m, n) under the active AxisPlan (trace-time).
+
+    Under tensor-parallel decode the arrays reaching a wrapper are GLOBAL
+    (pjit partitions them later), but each device only computes its
+    [m/dp, n/mp] tile of a column-parallel projection — block shapes and
+    tuned-cache keys must describe that local tile, or the tuner measures
+    (and the dispatcher blocks for) work mp·dp times the size any single
+    device ever runs. Dims that do not divide stay global, matching the
+    replicate fallback in distributed.sharding.resolve_physical_spec.
+    """
+    from repro.distributed.sharding import current_plan
+    plan = current_plan()
+    if plan is None:
+        return m, n
+    dp = plan.axis_size("batch")
+    mp = plan.axis_size("model")
+    if dp > 1 and m % dp == 0:
+        m //= dp
+    if mp > 1 and n % mp == 0:
+        n //= mp
+    return m, n
+
+
 def resolve_dispatch(m, n, g, k_group, planes, *, fusion="auto",
                      block_m=None, block_n=None, block_g=None,
                      table_quant: Optional[str] = "per_row"):
@@ -105,7 +129,9 @@ def resolve_dispatch(m, n, g, k_group, planes, *, fusion="auto",
 
     Returns the fully-resolved ``(fusion, bm, bn, bg)`` the wrappers will
     run — the single source of truth shared by ``lut_mpgemm`` and the
-    round-trip tests. Policies:
+    round-trip tests. Under an active AxisPlan the decision is made on the
+    PER-SHARD local tile (``plan_local_shape``), and the tuned-cache key is
+    the local shape — what each device actually executes. Policies:
 
       * ``"tuned"``  — consult the active autotune cache (core.autotune);
         a hit supplies the measured fusion and fills any block knob the
@@ -115,6 +141,7 @@ def resolve_dispatch(m, n, g, k_group, planes, *, fusion="auto",
       * ``"auto"``   — clamp blocks, then the LMMA VMEM-fit heuristic.
       * ``"fused"``/``"staged"`` — forced, blocks clamped as usual.
     """
+    m, n = plan_local_shape(m, n)
     if fusion == "tuned":
         tc = autotune.lookup_tuned(m, n, g, k_group, planes,
                                    table_quant=table_quant)

@@ -69,6 +69,13 @@ def main(argv=None):
                          "this engine dispatches and persist the cache "
                          "(lut_pallas only)")
     ap.add_argument("--weight-bits", type=int, default=2)
+    ap.add_argument("--mesh", default=None, metavar="DXM",
+                    help="serving mesh 'data x model', e.g. 2x4: shards "
+                         "packed weights / caches / engine state over a "
+                         "jax.sharding mesh (needs data*model devices). "
+                         "Default is single-device — the 1x1 no-op plan")
+    ap.add_argument("--tp", type=int, default=None, metavar="N",
+                    help="tensor-parallel shortcut for --mesh 1xN")
     args = ap.parse_args(argv)
 
     cfg = (registry.get_reduced(args.arch) if args.reduced
@@ -89,6 +96,22 @@ def main(argv=None):
               "auto heuristic on every dispatch")
     if args.prefix_cache and args.cache_block_size is None:
         ap.error("--prefix-cache requires --cache-block-size")
+    if args.mesh is not None and args.tp is not None:
+        ap.error("--mesh and --tp are mutually exclusive")
+    plan = None
+    if args.mesh is not None or args.tp is not None:
+        from repro.launch.mesh import make_plan, make_serving_mesh
+        if args.mesh is not None:
+            try:
+                d, m = (int(v) for v in args.mesh.lower().split("x"))
+            except ValueError:
+                ap.error(f"--mesh wants 'DxM' (e.g. 2x4), got {args.mesh!r}")
+        else:
+            d, m = 1, args.tp
+        mesh = make_serving_mesh(data=d, model=m)
+        plan = make_plan(mesh, fsdp=False)
+        print(f"serving mesh {d}x{m} (data x model) over "
+              f"{jax.device_count()} devices")
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,
                         max_seq=args.max_seq,
                         decode_chunk=args.decode_chunk,
@@ -97,7 +120,8 @@ def main(argv=None):
                         tuning_cache=args.tuning_cache,
                         cache_block_size=args.cache_block_size,
                         num_cache_blocks=args.num_cache_blocks,
-                        prefix_cache=args.prefix_cache)
+                        prefix_cache=args.prefix_cache,
+                        plan=plan)
     if args.pretune:
         if eng.tuning_cache is None:  # tune in-memory for this process
             from repro.core import autotune

@@ -6,6 +6,13 @@ weights [E, d_in, d_out] become batched QuantizedWeights (vmapped quantize).
 
 Never quantized (DESIGN.md §5): embedding table, MoE router, norms, gates,
 conv taps, SSM A/D/dt vectors, positional tables.
+
+Per-arch mixed precision: ``quant["skip"]`` is a path regex for
+projections that must stay float — the standard sensitive-module escape
+hatch (AWQ/GPTQ-style skip lists). Quantization error injected into SSM
+dynamics compounds through the recurrence (and, for zamba2, through the
+reused shared blocks), so hybrid configs keep their mamba in/out
+projections in fp while still packing attention, MLP, and the LM head.
 """
 
 from __future__ import annotations
@@ -33,6 +40,21 @@ def _quantize_2d(w, quant) -> Q.QuantizedWeight:
     return qw
 
 
+def _quantize_stacked(w, quant) -> Q.QuantizedWeight:
+    """[..., d_in, d_out] with any leading stacked dims (layer stacks,
+    zamba2 groups, stacked MoE experts) -> batched QuantizedWeight whose
+    children carry the same leading dims (packed [..., N, bytes]).
+
+    ``lax.scan`` over a layer stack slices each pytree child's leading dim
+    and rebuilds the per-layer QuantizedWeight via tree_unflatten, so the
+    scanned forwards consume these with no special casing.
+    """
+    fn = lambda we: _quantize_2d(we, quant)
+    for _ in range(w.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(w)
+
+
 def quantize_params(params: Dict[str, Any], quant: dict) -> Dict[str, Any]:
     """Returns a new tree with projections replaced by packed weights.
 
@@ -46,24 +68,32 @@ def quantize_params(params: Dict[str, Any], quant: dict) -> Dict[str, Any]:
     fusion = quant.get("fusion", "auto")
     if fusion not in FUSION_MODES:
         raise ValueError(f"fusion {fusion!r} not in {FUSION_MODES}")
+    if mode == "fp16":
+        # fp16 is the float reference path: packing here would force a
+        # per-step dequantize inside the layer scan for zero memory win
+        return params
     kg = quant.get("k_group", 4)
+    skip = re.compile(quant["skip"]) if quant.get("skip") else None
 
     def walk(node, path):
         if isinstance(node, dict):
+            if skip is not None and skip.search(path):
+                return node
             if "w" in node and _QUANTIZABLE.search(path) and not _NEVER.search(path):
                 w = node["w"]
-                if w.ndim == 2 and w.shape[0] % kg == 0:
-                    out = {"qw": _quantize_2d(w, quant)}
+                # any number of leading stacked dims: per-layer stacks
+                # [L, in, out], zamba2 group stacks [G, P, in, out], ...
+                if w.ndim >= 2 and w.shape[-2] % kg == 0:
+                    out = {"qw": _quantize_stacked(w, quant)}
                     if "b" in node:
                         out["b"] = node["b"]
                     return out
             if path.endswith("experts"):
-                # stacked expert weights [E, d_in, d_out] -> batched QW
+                # stacked expert weights [(L,) E, d_in, d_out] -> batched QW
                 out = {}
                 for name, w in node.items():
-                    if w.ndim == 3 and w.shape[1] % kg == 0:
-                        out[name + "_qw"] = jax.vmap(
-                            lambda we: _quantize_2d(we, quant))(w)
+                    if w.ndim >= 3 and w.shape[-2] % kg == 0:
+                        out[name + "_qw"] = _quantize_stacked(w, quant)
                     else:
                         out[name] = w
                 return out
@@ -71,6 +101,29 @@ def quantize_params(params: Dict[str, Any], quant: dict) -> Dict[str, Any]:
         return node
 
     return walk(params, "")
+
+
+def to_cw_params(params):
+    """Convert every packed ``QuantizedWeight`` leaf to the offline-CW store
+    (bit-exact for the lut_xla path; see ``Q.to_cw_format``).
+
+    The LUT hardware consumes packed planes directly, but the XLA emulation
+    must expand packed -> codeword matrix on every call — hoisting that
+    expansion here (once, at load time) trades 4x weight bytes at W2 for
+    removing the per-step unpack from the decode scan. Stacked leading dims
+    (layer stacks, expert stacks) are vmapped through.
+    """
+    def conv(node):
+        if isinstance(node, Q.QuantizedWeight) and node.packed is not None:
+            fn = Q.to_cw_format
+            for _ in range(node.packed.ndim - 2):
+                fn = jax.vmap(fn)
+            return fn(node)
+        return node
+
+    return jax.tree.map(
+        conv, params,
+        is_leaf=lambda n: isinstance(n, Q.QuantizedWeight))
 
 
 def quantized_bytes(params) -> int:

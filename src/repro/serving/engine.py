@@ -55,8 +55,11 @@ from typing import Any, Deque, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import ArchConfig
+from repro.distributed import sharding as shrules
+from repro.distributed.sharding import AxisPlan, plan_scope
 from repro.models import api, kvcache
 from repro.serving import blockpool
 from repro.serving.sampler import sample
@@ -111,8 +114,29 @@ class ServingEngine:
                  cache_block_size: Optional[int] = None,
                  num_cache_blocks: Optional[int] = None,
                  prefix_cache: bool = False,
-                 kv_cache_dtype: Optional[str] = None):
+                 kv_cache_dtype: Optional[str] = None,
+                 plan: Optional[AxisPlan] = None):
         self.cfg = cfg
+        # Tensor/data-parallel serving: ``plan`` shards the packed weights
+        # (named_sharding_tree), the engine state and the cache pool across
+        # the plan's mesh, and every jitted program traces inside
+        # ``plan_scope`` so the models' logical-axis shard() hooks fire.
+        # ``plan=None`` is the single-device default — identical to a 1x1
+        # mesh plan, where every constraint resolves to replication.
+        self.plan = plan
+        if plan is not None:
+            params = jax.device_put(
+                params, shrules.named_sharding_tree(params, plan))
+        elif (cfg.quant and jax.default_backend() == "cpu"
+              and cfg.quant.get("mpgemm_mode", "lut_xla") == "lut_xla"
+              and cfg.quant.get("store") is None):
+            # Single-device CPU serving: the XLA LUT path has no hardware
+            # lookup unit, so a packed store forces a packed->CW expansion
+            # inside every decode step. Hoist it: convert once to the
+            # offline-CW store (bit-exact, same lut_xla epilogue). Pin
+            # quant["store"]="packed" to keep packed planes resident.
+            from repro.models.quantized import to_cw_params
+            params = to_cw_params(params)
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
@@ -268,6 +292,9 @@ class ServingEngine:
             key=jax.random.key(seed),
             page_table=page_table,
             caches=caches)
+        if self.plan is not None:
+            self.state = jax.device_put(
+                self.state, self._engine_state_shardings(self.state))
         self.decode_syncs = 0       # host round-trips in the decode loop
         self.decode_tokens = 0      # tokens emitted by decode chunks
         self.prefill_dispatches = 0
@@ -281,13 +308,61 @@ class ServingEngine:
         self.occupancy_samples: List[float] = []  # slot occupancy per chunk
         self.peak_active_slots = 0
 
+    def _engine_state_shardings(self, state: EngineState) -> EngineState:
+        """NamedSharding pytree for the engine state under ``self.plan``.
+
+        Per-slot control vectors and the DENSE cache batch dim shard over
+        the plan's batch axes; attention KV heads (dim seq+1) and SSM
+        feature dims (dim batch+1) shard over the model axis, matching the
+        column-parallel projections that produce them. Paged POOL leaves
+        keep their block dim replicated: page tables index the global pool,
+        so any slot may reference any block — sharding blocks over data
+        would turn every page gather into a cross-shard collective. All of
+        this is layout-only (GSPMD), so every fallback is replication, not
+        an error."""
+        plan = self.plan
+        mesh = plan.mesh
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        batch_ax = plan.resolve("batch")
+        model_ax = plan.resolve("model")
+
+        def ns(shape, phys):
+            return NamedSharding(mesh, P(*shrules.resolve_physical_spec(
+                shape, phys, sizes)))
+
+        def vec(x):
+            return ns(x.shape, (batch_ax,) + (None,) * (x.ndim - 1))
+
+        pooled = (self._pooled if self.paged
+                  else jax.tree.map(lambda _: False, self._axes))
+
+        def cache_leaf(c, bax, sax, is_pooled):
+            phys = [None] * c.ndim
+            if not is_pooled:
+                phys[bax] = batch_ax
+            feat = (sax + 1) if sax >= 0 else (bax + 1)
+            if feat < c.ndim and phys[feat] is None:
+                phys[feat] = model_ax
+            return ns(c.shape, tuple(phys))
+
+        caches_sh = jax.tree.map(cache_leaf, state.caches, self._axes,
+                                 self._seq_axes, pooled)
+        rep = NamedSharding(mesh, P())
+        return EngineState(
+            pos=vec(state.pos), budget=vec(state.budget),
+            last_tok=vec(state.last_tok), active=vec(state.active),
+            temperature=vec(state.temperature), top_k=vec(state.top_k),
+            top_p=vec(state.top_p), key=rep,
+            page_table=vec(state.page_table), caches=caches_sh)
+
     # -- jitted programs ----------------------------------------------------
     def _prefill_chunk_impl(self, params, slot_caches, tokens, offset, valid):
         """Write one [1, C] prompt chunk into a batch-1 slot-cache view at
         cache offset ``offset``; ``valid`` <= C real tokens (right-pad)."""
-        _, new_caches, _ = api.forward(
-            params, {"tokens": tokens}, self.cfg, caches=slot_caches,
-            cache_pos=offset, token_valid=jnp.reshape(valid, (1,)))
+        with plan_scope(self.plan):
+            _, new_caches, _ = api.forward(
+                params, {"tokens": tokens}, self.cfg, caches=slot_caches,
+                cache_pos=offset, token_valid=jnp.reshape(valid, (1,)))
         return new_caches
 
     def _paged_prefill_impl(self, params, view_caches, tokens, offset, valid,
@@ -297,10 +372,11 @@ class ServingEngine:
         ([1, blocks_per_slot]); unpooled (SSM/cross) leaves ride along as a
         batch-1 slot view. The whole view is donated through the chunk loop,
         so pool pages are updated in place across chunks."""
-        _, new_caches, _ = api.forward(
-            params, {"tokens": tokens}, self.cfg, caches=view_caches,
-            cache_pos=offset, token_valid=jnp.reshape(valid, (1,)),
-            page_table=page_row)
+        with plan_scope(self.plan):
+            _, new_caches, _ = api.forward(
+                params, {"tokens": tokens}, self.cfg, caches=view_caches,
+                cache_pos=offset, token_valid=jnp.reshape(valid, (1,)),
+                page_table=page_row)
         return new_caches
 
     def _copy_block_impl(self, caches, src, dst):
@@ -345,8 +421,9 @@ class ServingEngine:
                 caches=new_caches)
             return st, (nxt, can)
 
-        state, (toks, valid) = jax.lax.scan(
-            step, state, None, length=self.decode_chunk)
+        with plan_scope(self.plan):
+            state, (toks, valid) = jax.lax.scan(
+                step, state, None, length=self.decode_chunk)
         return state, toks, valid  # toks/valid: [N, B]
 
     # -- host loop (chunk boundaries only) ----------------------------------
@@ -646,10 +723,12 @@ class ServingEngine:
             warnings.warn("pretune() is a no-op for mpgemm_mode="
                           f"{q.get('mpgemm_mode')!r} (no kernel knobs)")
             return 0
+        from repro.core.mpgemm import resolve_table_quant
         n = autotune.pretune_params(
             self.params, [self.max_batch, self.prefill_chunk], cache=cache,
-            table_quant=q.get("table_quant", "per_row"), repeats=repeats,
-            max_candidates=max_candidates, verbose=verbose)
+            table_quant=resolve_table_quant(q.get("table_quant", "per_row")),
+            plan=self.plan,
+            repeats=repeats, max_candidates=max_candidates, verbose=verbose)
         if cache.path is not None:
             cache.save()
         return n
@@ -677,6 +756,8 @@ class ServingEngine:
             # cache-pool observability (meaningful for dense too: the HBM
             # number is what the paged/dense capacity comparison fixes)
             "paged": self.paged,
+            "mesh": (None if self.plan is None else dict(zip(
+                self.plan.mesh.axis_names, self.plan.mesh.devices.shape))),
             "cache_hbm_bytes": int(sum(
                 l.nbytes for l in jax.tree.leaves(self.state.caches))),
             "slot_occupancy": (sum(occ) / len(occ)) if occ else 0.0,

@@ -27,7 +27,10 @@ def _run_sub(code: str, devices: int = 8):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC
-    env.pop("JAX_PLATFORMS", None)
+    # forced host devices exist only on the CPU backend; pinning it
+    # also skips the accelerator-plugin probe (a sleep-poll loop that
+    # starves 1-cpu boxes)
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                        capture_output=True, text=True, env=env, timeout=560)
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-4000:]}"

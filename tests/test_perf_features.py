@@ -23,6 +23,10 @@ def _run_sub(code, devices=8):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC
+    # forced host devices exist only on the CPU backend; pinning it also
+    # skips the accelerator-plugin probe (a sleep-poll that starves 1-cpu
+    # boxes)
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                        capture_output=True, text=True, env=env, timeout=560)
     assert r.returncode == 0, f"OUT:\n{r.stdout}\nERR:\n{r.stderr[-4000:]}"
