@@ -5,7 +5,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: install test test-fast bench-smoke bench-serving bench-autotune \
-	bench-distributed
+	bench-distributed bench-decoding
 
 install:
 	$(PYTHON) -m pip install -r requirements.txt
@@ -34,3 +34,7 @@ bench-autotune:  ## measured-time kernel tuner vs LMMA heuristic -> JSON
 bench-distributed: ## tensor-parallel sharded decode vs dense -> JSON
 	$(PYTHON) benchmarks/bench_distributed.py --mesh 2x4 \
 		--out BENCH_distributed.json
+
+bench-decoding:  ## beam + bit-plane self-speculation vs greedy -> JSON
+	$(PYTHON) benchmarks/bench_decoding.py --reduced \
+		--assert-spec-speedup 1.0 --out BENCH_decoding.json

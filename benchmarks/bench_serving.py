@@ -56,6 +56,25 @@ from repro.models import api
 from repro.serving.engine import Request, ServingEngine
 
 
+def assert_finite(obj, path="result"):
+    """Every numeric field in the emitted bench JSON must be finite.
+
+    A NaN/inf slipping into a rate (e.g. a blocked-admissions ratio with
+    zero attempts) poisons downstream trend tooling silently; fail the
+    bench loudly instead."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            assert_finite(v, f"{path}.{k}")
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            assert_finite(v, f"{path}[{i}]")
+    elif isinstance(obj, bool) or obj is None or isinstance(obj, str):
+        pass
+    elif isinstance(obj, (int, float, np.integer, np.floating)):
+        if not np.isfinite(obj):
+            raise AssertionError(f"non-finite bench field {path} = {obj!r}")
+
+
 def _requests(cfg, n, max_new, seed=0):
     rng = np.random.default_rng(seed)
     reqs = []
@@ -322,6 +341,7 @@ def main(argv=None):
             if r < args.assert_paged_ratio:
                 failed.append(f"paged decode tok/s ratio {r:.3f} < "
                               f"{args.assert_paged_ratio}")
+    assert_finite(result)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=2)

@@ -45,7 +45,8 @@ __all__ = [
 class QuantizedWeight:
     """Pytree container for packed low-bit weights (see module docstring)."""
 
-    def __init__(self, packed, scale, zero_prime, plane_scales, *, bits, k_group, k_total, n, cw=None):
+    def __init__(self, packed, scale, zero_prime, plane_scales, *, bits, k_group, k_total, n, cw=None,
+                 plane_start=0, stored_planes=None):
         self.packed = packed
         self.scale = scale
         self.zero_prime = zero_prime
@@ -59,6 +60,16 @@ class QuantizedWeight:
         self.k_group = int(k_group)
         self.k_total = int(k_total)
         self.n = int(n)
+        # plane-sliced execution view (paper §3.1.2: the packed tensor IS a
+        # sum of ±1 planes, so a contiguous plane subrange of the SAME
+        # buffer is a coarser-precision model for free). ``stored_planes``
+        # is the plane count of the underlying packed layout (governs the
+        # byte math); ``plane_start`` is where this view's planes begin.
+        # A full-precision weight has plane_start == 0 and
+        # stored_planes == len(plane_scales).
+        self.plane_start = int(plane_start)
+        self.stored_planes = (len(self.plane_scales) if stored_planes is None
+                              else int(stored_planes))
 
     # -- pytree protocol ----------------------------------------------------
     # Keyed flattening so tree_flatten_with_path yields NAMED child paths
@@ -71,20 +82,23 @@ class QuantizedWeight:
                     (jax.tree_util.GetAttrKey("scale"), self.scale),
                     (jax.tree_util.GetAttrKey("zero_prime"), self.zero_prime),
                     (jax.tree_util.GetAttrKey("cw"), self.cw))
-        aux = (self.plane_scales, self.bits, self.k_group, self.k_total, self.n)
+        aux = (self.plane_scales, self.bits, self.k_group, self.k_total,
+               self.n, self.plane_start, self.stored_planes)
         return children, aux
 
     def tree_flatten(self):
         children = (self.packed, self.scale, self.zero_prime, self.cw)
-        aux = (self.plane_scales, self.bits, self.k_group, self.k_total, self.n)
+        aux = (self.plane_scales, self.bits, self.k_group, self.k_total,
+               self.n, self.plane_start, self.stored_planes)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         packed, scale, zero_prime, cw = children
-        plane_scales, bits, k_group, k_total, n = aux
+        plane_scales, bits, k_group, k_total, n, plane_start, stored = aux
         return cls(packed, scale, zero_prime, plane_scales,
-                   bits=bits, k_group=k_group, k_total=k_total, n=n, cw=cw)
+                   bits=bits, k_group=k_group, k_total=k_total, n=n, cw=cw,
+                   plane_start=plane_start, stored_planes=stored)
 
     # -- helpers -------------------------------------------------------------
     @property
@@ -95,16 +109,61 @@ class QuantizedWeight:
     def g(self) -> int:
         return self.k_total // self.k_group
 
+    @property
+    def is_plane_sliced(self) -> bool:
+        return (self.plane_start != 0
+                or self.stored_planes != self.num_planes)
+
     def sign_idx(self):
-        """Unpack to (sign, idx) uint8 [N, G, B]."""
-        return packing.unpack_group_codes(self.packed, self.k_group, self.g, self.num_planes)
+        """Unpack to (sign, idx) uint8 [N, G, B].
+
+        The packed byte stream is group-major ((g, b) at field g*B + b), so
+        a plane-sliced view CANNOT truncate bytes: unpack at the stored
+        plane count, then slice this view's plane range.
+        """
+        sign, idx = packing.unpack_group_codes(
+            self.packed, self.k_group, self.g, self.stored_planes)
+        if self.is_plane_sliced:
+            sl = slice(self.plane_start, self.plane_start + self.num_planes)
+            sign, idx = sign[..., sl], idx[..., sl]
+        return sign, idx
+
+    def plane_slice(self, keep: int) -> "QuantizedWeight":
+        """Top-``keep``-planes draft view of the SAME packed buffer.
+
+        Zero-copy: the returned weight shares ``packed``/``scale``/
+        ``zero_prime`` with ``self`` (no extra weight HBM).  Dropping the
+        ``B - keep`` low-order planes perturbs each weight by at most
+        ``s'·(2^(B-keep) - 1)`` — the sign planes are ±1, never 0, so the
+        dropped contribution is mean-zero noise and ``z'`` stays unbiased.
+        CW-store weights cannot be sliced (CW bakes all planes in).
+        """
+        if keep >= self.num_planes:
+            return self
+        if keep < 1:
+            raise ValueError(f"plane_slice(keep={keep}): need >= 1 plane")
+        if self.packed is None:
+            raise ValueError(
+                "plane_slice needs the packed store: the offline CW matrix "
+                "bakes every plane into its entries and is not re-sliceable "
+                "(pin quant['store']='packed' before converting)")
+        start = self.plane_start + (self.num_planes - keep)
+        return QuantizedWeight(
+            self.packed, self.scale, self.zero_prime,
+            self.plane_scales[self.num_planes - keep:],
+            bits=self.bits, k_group=self.k_group, k_total=self.k_total,
+            n=self.n, cw=None, plane_start=start,
+            stored_planes=self.stored_planes)
 
     def storage_bits_per_weight(self) -> float:
         return self.packed.shape[1] * 8 / self.k_total
 
     def __repr__(self):
+        sl = (f", view=[{self.plane_start}:"
+              f"{self.plane_start + self.num_planes}]/{self.stored_planes}"
+              if self.is_plane_sliced else "")
         return (f"QuantizedWeight(n={self.n}, k={self.k_total}, bits={self.bits}, "
-                f"k_group={self.k_group}, planes={self.num_planes})")
+                f"k_group={self.k_group}, planes={self.num_planes}{sl})")
 
 
 def _pack_planes(planes, k_group):

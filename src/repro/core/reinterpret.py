@@ -46,6 +46,7 @@ __all__ = [
     "plane_scales_for",
     "fold_msb_negation",
     "unfold_group_codes",
+    "plane_truncation_bound",
 ]
 
 
@@ -89,6 +90,21 @@ def ternary_to_sign_planes(t):
     pa = (t >= 0).astype(jnp.uint8)
     pb = (t > 0).astype(jnp.uint8)
     return jnp.stack([pa, pb], axis=-1)
+
+
+def plane_truncation_bound(plane_scales, keep: int) -> float:
+    """Worst-case |q'_full - q'_view| when keeping only the top ``keep`` planes.
+
+    Consequence 1 above makes a plane-sliced view of the packed buffer a
+    *free* coarser model (the self-speculation draft): because every σ_b is
+    exactly ±1 — never 0 — dropping plane b perturbs q' by exactly ±ps_b,
+    so the truncation error is bounded by the dropped plane-scale sum
+    (e.g. keeping the top 2 of 4 odd-grid planes: |Δq'| ≤ 1 + 2 = 3, i.e.
+    3·s' in real units).  The bound is tight and mean-zero over random
+    low-plane bits, which is why the draft's argmax tracks the target's.
+    """
+    dropped = tuple(plane_scales)[: len(tuple(plane_scales)) - keep]
+    return float(sum(dropped))
 
 
 def fold_msb_negation(planes, k_group: int):

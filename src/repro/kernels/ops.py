@@ -159,6 +159,19 @@ def resolve_dispatch(m, n, g, k_group, planes, *, fusion="auto",
     return fusion, bm, bn, bg
 
 
+def _check_not_plane_sliced(qw: QuantizedWeight, opname: str):
+    """The Pallas kernels unpack the byte stream in-kernel with
+    ``num_planes`` as the per-group field stride — a plane-sliced draft view
+    (stored_planes != num_planes) would decode the wrong bytes. Sliced views
+    run through lut_xla / dequant modes, which go via ``sign_idx()``."""
+    if getattr(qw, "is_plane_sliced", False):
+        raise NotImplementedError(
+            f"{opname}: plane-sliced QuantizedWeight views (planes "
+            f"[{qw.plane_start}:{qw.plane_start + qw.num_planes}] of "
+            f"{qw.stored_planes} stored) are not supported by the Pallas "
+            f"kernels; use mode='lut_xla' or 'dequant' for the draft view")
+
+
 def _padded_row_scale(a: jax.Array, g: int, k_group: int, bm: int):
     rs = _pad_to(_closed_form_row_scale(a, g, k_group), bm, 0)
     return jnp.where(rs == 0, 1.0, rs)  # padded rows get an inert scale
@@ -225,6 +238,7 @@ def fused_lut_mpgemm(x: jax.Array, qw: QuantizedWeight, *,
     staged ``table_precompute`` + ``lut_mpgemm`` composition on the per_row
     int8 path, float-tolerance-equal otherwise.
     """
+    _check_not_plane_sliced(qw, "fused_lut_mpgemm")
     m = x.shape[0]
     g = qw.g
     planes = qw.num_planes
@@ -273,6 +287,7 @@ def lut_mpgemm(x: jax.Array, qw: QuantizedWeight, *,
     """
     if fusion not in FUSION_MODES:
         raise ValueError(f"fusion {fusion!r} not in {FUSION_MODES}")
+    _check_not_plane_sliced(qw, "lut_mpgemm")
     m = x.shape[0]
     g, e = qw.g, 1 << (qw.k_group - 1)
     planes = qw.num_planes
@@ -313,6 +328,7 @@ def lut_mpgemm(x: jax.Array, qw: QuantizedWeight, *,
 def dequant_mpgemm(x: jax.Array, qw: QuantizedWeight, *,
                    block_m: int = 64, block_n: int = 256, block_g: int = 64,
                    interpret: bool = False) -> jax.Array:
+    _check_not_plane_sliced(qw, "dequant_mpgemm")
     m = x.shape[0]
     g = qw.g
     planes = qw.num_planes

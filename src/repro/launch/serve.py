@@ -18,6 +18,7 @@ import numpy as np
 from repro.configs import registry
 from repro.core.mpgemm import FUSION_MODES, MPGEMM_MODES
 from repro.models import api
+from repro.serving import decoding
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -43,6 +44,14 @@ def main(argv=None):
                     help="per-request nucleus mass (>=1 disables)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="stop a slot when it samples this token id")
+    ap.add_argument("--decoding", default="greedy",
+                    help="per-request decoding mode: greedy | sample | "
+                         "beam:W (width-W beam search, W pool slots per "
+                         "request) | spec:draftNb (bit-plane self-"
+                         "speculation drafting with the top N planes of "
+                         "the SAME packed weights)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per speculative verify round")
     ap.add_argument("--cache-block-size", type=int, default=None,
                     help="enable the block-paged KV cache pool with this "
                          "many positions per block (must divide --max-seq)")
@@ -96,6 +105,14 @@ def main(argv=None):
               "auto heuristic on every dispatch")
     if args.prefix_cache and args.cache_block_size is None:
         ap.error("--prefix-cache requires --cache-block-size")
+    try:
+        dm = decoding.parse(args.decoding)
+    except ValueError as e:
+        ap.error(str(e))
+    spec_draft_planes = dm.draft_planes if dm.kind == decoding.SPEC else None
+    if spec_draft_planes is not None and args.mode == "fp16":
+        ap.error("--decoding spec needs a quantized mode: the draft is a "
+                 "bit-plane slice of the packed weights")
     if args.mesh is not None and args.tp is not None:
         ap.error("--mesh and --tp are mutually exclusive")
     plan = None
@@ -121,7 +138,9 @@ def main(argv=None):
                         cache_block_size=args.cache_block_size,
                         num_cache_blocks=args.num_cache_blocks,
                         prefix_cache=args.prefix_cache,
-                        plan=plan)
+                        plan=plan,
+                        spec_k=args.spec_k,
+                        spec_draft_planes=spec_draft_planes)
     if args.pretune:
         if eng.tuning_cache is None:  # tune in-memory for this process
             from repro.core import autotune
@@ -136,7 +155,7 @@ def main(argv=None):
         eng.submit(Request(
             uid=i, prompt=rng.integers(0, cfg.vocab_size, plen, dtype=np.int32),
             max_new_tokens=args.max_new, temperature=args.temperature,
-            top_k=args.top_k, top_p=args.top_p))
+            top_k=args.top_k, top_p=args.top_p, decoding=args.decoding))
     t0 = time.time()
     chunks = eng.run_to_completion()
     dt = time.time() - t0
@@ -148,6 +167,13 @@ def main(argv=None):
     print(f"host syncs/token {st['host_syncs_per_token']:.4f} "
           f"(decode_chunk={args.decode_chunk}), chunk latency "
           f"p50 {st['p50_chunk_ms']:.1f} ms / p95 {st['p95_chunk_ms']:.1f} ms")
+    if "spec" in st:
+        sp = st["spec"]
+        print(f"self-speculation: K={sp['spec_k']}, draft "
+              f"{sp['draft_planes']} planes (+{sp['draft_extra_hbm_bytes']} "
+              f"bytes weight HBM), {sp['verify_steps']} verify rounds, "
+              f"{sp['mean_accepted_per_step']:.2f} draft tokens accepted / "
+              f"round ({sp['mean_emitted_per_step']:.2f} emitted)")
     if st["paged"]:
         line = (f"paged pool: {st['num_cache_blocks']} x "
                 f"{st['cache_block_size']}-token blocks, cache HBM "

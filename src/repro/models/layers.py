@@ -257,9 +257,16 @@ def chunked_attention(
         s = jnp.where(mask[None, :, None, None, :], s, neg)
         if kv_valid_len is not None:
             vl = jnp.asarray(kv_valid_len)
-            vl = vl[:, None] if vl.ndim == 1 else vl.reshape(1, 1)
-            vmask = (ci * chunk + jnp.arange(chunk))[None, :] < vl  # [B, chunk]
-            s = jnp.where(vmask[:, None, None, None, :], s, neg)
+            cpos = ci * chunk + jnp.arange(chunk)
+            if vl.ndim == 2:
+                # [B, Sq]: per-query valid length (multi-token speculative
+                # decode — query j may read cache written by query j-1)
+                vmask = cpos[None, None, :] < vl[:, :, None]  # [B, Sq, chunk]
+                s = jnp.where(vmask[:, :, None, None, :], s, neg)
+            else:
+                vl = vl[:, None] if vl.ndim == 1 else vl.reshape(1, 1)
+                vmask = cpos[None, :] < vl  # [B, chunk]
+                s = jnp.where(vmask[:, None, None, None, :], s, neg)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -440,12 +447,17 @@ def attention_apply(
                       for leaf in new_cache)
             ksg = vsg = None
         if per_slot:
-            assert s == 1, "per-slot cache positions only support decode (s=1)"
             if ksg is None:
                 kg, vg = kg.astype(q.dtype), vg.astype(q.dtype)
+            # s > 1 is the speculative decode burst: query j of slot b may
+            # read every position up to its own write, so the valid length
+            # is per-(slot, query) [B, S]. paged_scatter routes any
+            # out-of-range pos2d through the null block, so slots near
+            # max_seq stay safe.
+            vlen = base + 1 if s == 1 else pos2d + 1
             out = chunked_attention(
                 q, kg, vg, k_scale=ksg, v_scale=vsg,
-                q_offset=0, causal=False, kv_valid_len=base + 1,
+                q_offset=0, causal=False, kv_valid_len=vlen,
                 chunk=getattr(cfg, "attn_chunk", 1024))
         else:
             out = chunked_attention(
@@ -456,30 +468,47 @@ def attention_apply(
         return lut_dense(p["wo"], out, quant), new_cache
 
     if per_slot and kv_cache is not None and xattn_kv is None:
-        assert s == 1, "per-slot cache positions only support decode (s=1)"
         bi = jnp.arange(b)
         cp = jnp.asarray(cache_pos)
+        # s == 1 keeps the exact single-token decode write; s > 1 is the
+        # speculative burst: scatter all s fresh positions (mode="drop"
+        # silently skips writes past max_seq — those queries are masked off
+        # by the engine's budget logic) and give each query its own valid
+        # length so query j sees positions <= cp + j.
+        pos2d = cp[:, None] + jnp.arange(s)[None, :]  # [B, S]
+        vlen = cp + 1 if s == 1 else pos2d + 1
         if len(kv_cache) == 4:  # int8 KV cache: quantize the new token slice
             ck, cv, cks, cvs = kv_cache
             kq, ks_new = _quantize_kv_slice(k)
             vq, vs_new = _quantize_kv_slice(v)
-            ck = ck.at[bi, cp].set(kq[:, 0])
-            cv = cv.at[bi, cp].set(vq[:, 0])
-            cks = cks.at[bi, cp].set(ks_new[:, 0])
-            cvs = cvs.at[bi, cp].set(vs_new[:, 0])
+            if s == 1:
+                ck = ck.at[bi, cp].set(kq[:, 0])
+                cv = cv.at[bi, cp].set(vq[:, 0])
+                cks = cks.at[bi, cp].set(ks_new[:, 0])
+                cvs = cvs.at[bi, cp].set(vs_new[:, 0])
+            else:
+                bi2 = bi[:, None]
+                ck = ck.at[bi2, pos2d].set(kq, mode="drop")
+                cv = cv.at[bi2, pos2d].set(vq, mode="drop")
+                cks = cks.at[bi2, pos2d].set(ks_new, mode="drop")
+                cvs = cvs.at[bi2, pos2d].set(vs_new, mode="drop")
             out = chunked_attention(
                 q, ck, cv, k_scale=cks, v_scale=cvs,
-                q_offset=0, causal=False, kv_valid_len=cp + 1,
+                q_offset=0, causal=False, kv_valid_len=vlen,
                 chunk=getattr(cfg, "attn_chunk", 1024))
             out = out.reshape(b, s, cfg.n_heads * hd)
             return lut_dense(p["wo"], out, quant), (ck, cv, cks, cvs)
         ck, cv = kv_cache
-        ck = ck.at[bi, cp].set(k[:, 0].astype(ck.dtype))
-        cv = cv.at[bi, cp].set(v[:, 0].astype(cv.dtype))
+        if s == 1:
+            ck = ck.at[bi, cp].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[bi, cp].set(v[:, 0].astype(cv.dtype))
+        else:
+            ck = ck.at[bi[:, None], pos2d].set(k.astype(ck.dtype), mode="drop")
+            cv = cv.at[bi[:, None], pos2d].set(v.astype(cv.dtype), mode="drop")
         out = chunked_attention(
             q, ck.astype(q.dtype), cv.astype(q.dtype),
             q_offset=0, causal=False,
-            kv_valid_len=cp + 1,
+            kv_valid_len=vlen,
             chunk=getattr(cfg, "attn_chunk", 1024))
         out = out.reshape(b, s, cfg.n_heads * hd)
         return lut_dense(p["wo"], out, quant), (ck, cv)

@@ -126,6 +126,45 @@ def to_cw_params(params):
         is_leaf=lambda n: isinstance(n, Q.QuantizedWeight))
 
 
+def plane_sliced_params(params, keep_planes: int):
+    """Plane-sliced *execution view* of a packed param tree (§3.1.2).
+
+    Every packed ``QuantizedWeight`` leaf is replaced by its top-
+    ``keep_planes`` view (``QuantizedWeight.plane_slice``) — the same
+    buffers reinterpreted at a lower plane count, so the returned tree is a
+    coarser draft model that costs ZERO extra weight HBM (self-speculative
+    decoding's draft). Float leaves (norms, embeddings, skipped
+    projections) are shared as-is, keeping the draft/target LM head and
+    embedding identical. Raises if any quantized leaf lacks the packed
+    store (CW-only trees bake all planes into the codeword matrix and
+    cannot be re-sliced — pin ``quant["store"]="packed"``).
+    """
+    def conv(node):
+        if isinstance(node, Q.QuantizedWeight):
+            if node.packed is None:
+                raise ValueError(
+                    "plane_sliced_params: CW-store weight cannot be "
+                    "plane-sliced; keep quant['store']='packed' for the "
+                    "self-speculation draft view")
+            return node.plane_slice(keep_planes)
+        return node
+
+    return jax.tree.map(
+        conv, params,
+        is_leaf=lambda n: isinstance(n, Q.QuantizedWeight))
+
+
+def extra_hbm_bytes(view_params, base_params) -> int:
+    """Bytes in ``view_params`` whose buffers are NOT shared (by identity)
+    with ``base_params`` — the acceptance-criterion probe that the draft
+    view really is zero-copy."""
+    base_ids = {id(x) for x in jax.tree_util.tree_leaves(base_params)
+                if hasattr(x, "size")}
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(view_params)
+               if hasattr(x, "size") and id(x) not in base_ids)
+
+
 def quantized_bytes(params) -> int:
     """Total HBM bytes of a (possibly quantized) param tree."""
     return sum(x.size * x.dtype.itemsize

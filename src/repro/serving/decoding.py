@@ -1,0 +1,240 @@
+"""Per-slot decoding modes for the continuous-batching engine.
+
+The engine's decode scan runs ONE jitted program for the whole slot pool,
+so a request's decoding strategy must be (a) ordinary per-slot device
+state, like its sampling params, and (b) free of python control flow at
+step granularity. This module owns both halves:
+
+  * the **mode registry** — ``parse("beam:4")`` / ``parse("spec:draft2b")``
+    turn a request's ``decoding`` string into a :class:`DecodingMode`, and
+    the mode *kind* is the integer the engine carries in
+    ``EngineState.mode`` ([B] i32);
+  * the **pure step helpers** — ``beam_select`` (one beam expansion over
+    the pool, fully vectorized, no per-group loops) and
+    ``speculative_accept`` (Leviathan-style rejection sampling over a
+    drafted token block, with the greedy path reduced to exact argmax
+    agreement so greedy speculation is bit-exact with plain greedy).
+
+Kinds:
+  * ``NORMAL`` — greedy/temperature/top-k/top-p sampling, one token per
+    scan step (the engine's historical behaviour).
+  * ``BEAM``   — width-W beam search. The W hypotheses occupy W pool
+    slots sharing a ``beam_group`` id; each step every member slot is
+    reassigned to the globally best W continuations of the group
+    (``beam_select``), and the engine forks caches to match. Beam search
+    maximizes log-likelihood, so the slot's sampling params are ignored.
+  * ``SPEC``   — self-speculative decoding. The draft model is the SAME
+    packed weight tensor reinterpreted at a lower plane count
+    (``models.quantized.plane_sliced_params`` — paper §3.1.2: a B-bit
+    packed weight is exactly a sum of ±1 bit-planes, so the top planes
+    are a free coarser model, zero extra weight HBM). The engine drafts
+    K tokens with the sliced view, verifies all of them plus a bonus
+    token in one s=K+1 target forward, and accepts the longest exact /
+    rejection-sampled prefix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["NORMAL", "BEAM", "SPEC", "DecodingMode", "parse",
+           "beam_select", "speculative_accept", "rank_hypotheses"]
+
+NORMAL, BEAM, SPEC = 0, 1, 2
+
+_NEG = -1e30  # finite -inf stand-in: survives top_k and float adds
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodingMode:
+    """Parsed decoding request: kind + its static hyperparameters."""
+    kind: int
+    name: str
+    beam_width: int = 1          # BEAM: number of pool slots the group owns
+    draft_planes: int = 0        # SPEC: planes kept in the sliced draft view
+
+    def __post_init__(self):
+        if self.kind == BEAM and self.beam_width < 1:
+            raise ValueError(f"beam width must be >= 1, got {self.beam_width}")
+        if self.kind == SPEC and self.draft_planes < 1:
+            raise ValueError(
+                f"spec draft needs >= 1 plane, got {self.draft_planes}")
+
+
+def parse(spec: str) -> DecodingMode:
+    """Parse a request/CLI decoding string into a :class:`DecodingMode`.
+
+    Grammar: ``greedy`` | ``sample`` | ``beam[:W]`` | ``spec[:draft<N>b]``
+    (also accepts bare ``spec:N``). Defaults: beam width 4, draft 2 planes.
+    """
+    s = spec.strip().lower()
+    head, _, arg = s.partition(":")
+    if head in ("greedy", "sample"):
+        if arg:
+            raise ValueError(f"decoding {spec!r}: {head} takes no argument")
+        return DecodingMode(NORMAL, head)
+    if head == "beam":
+        return DecodingMode(BEAM, "beam", beam_width=int(arg) if arg else 4)
+    if head == "spec":
+        if arg:
+            m = arg
+            if m.startswith("draft"):
+                m = m[len("draft"):]
+            if m.endswith("b"):
+                m = m[:-1]
+            planes = int(m)
+        else:
+            planes = 2
+        return DecodingMode(SPEC, "spec", draft_planes=planes)
+    raise ValueError(f"unknown decoding mode {spec!r} "
+                     "(expected greedy | sample | beam[:W] | spec[:draftNb])")
+
+
+# ---------------------------------------------------------------------------
+# beam search: one expansion step over the whole pool
+# ---------------------------------------------------------------------------
+
+def beam_select(cum_score, logp, live, group):
+    """One beam expansion for every beam group in the pool, vectorized.
+
+    Args:
+      cum_score: [B] f32 cumulative hypothesis log-prob per slot.
+      logp:      [B, V] f32 log-softmax of this step's logits.
+      live:      [B] bool — slot holds a still-expanding beam hypothesis.
+      group:     [B] i32 beam-group id (the leader's slot index); < 0 for
+                 slots that are not beam members.
+
+    Returns ``(parent, token, score)``, each [B]: live slot ``b`` becomes
+    the ``r``-th best continuation of its group, where ``r`` is ``b``'s
+    rank among the group's live slots (a stable, collision-free assignment
+    decided purely from indices — every member computes the same candidate
+    list, then picks its own rank). Non-live slots return themselves with
+    an unchanged score.
+
+    The candidate list is exact: each live slot contributes its top-``Wmax``
+    (``Wmax = min(B, V)``) continuations, and a group has at most B live
+    members needing at most B winners, so winner ``r < B <= Wmax`` can
+    always be served even if one parent supplies every winner.
+    """
+    b, v = logp.shape
+    wmax = min(b, v)
+    total = jnp.where(live[:, None], cum_score[:, None] + logp, _NEG)
+    vals, toks = jax.lax.top_k(total, wmax)            # [B, Wmax]
+
+    same = (group[:, None] == group[None, :]) & (group[:, None] >= 0)
+    same = same & live[None, :]                        # [B, B] b's live peers
+    # candidate matrix per slot: peers' top-Wmax, others masked out
+    cand = jnp.where(same[:, :, None], vals[None, :, :], _NEG)
+    cand = cand.reshape(b, b * wmax)
+    cvals, cidx = jax.lax.top_k(cand, wmax)            # [B, Wmax] ranked
+
+    # rank of slot b among its group's live slots (by index)
+    rank = jnp.sum(same & (jnp.arange(b)[None, :] < jnp.arange(b)[:, None]),
+                   axis=1)
+    pick = jnp.take_along_axis(cidx, rank[:, None], axis=1)[:, 0]  # [B]
+    parent_b = (pick // wmax).astype(jnp.int32)
+    tok = toks[parent_b, pick % wmax].astype(jnp.int32)
+    score = jnp.take_along_axis(cvals, rank[:, None], axis=1)[:, 0]
+
+    self_idx = jnp.arange(b, dtype=jnp.int32)
+    parent = jnp.where(live, parent_b, self_idx)
+    token = jnp.where(live, tok, jnp.zeros_like(tok))
+    score = jnp.where(live, score, cum_score)
+    return parent, token, score
+
+
+def rank_hypotheses(scores, lengths, alpha: float):
+    """GNMT length-normalized final ranking: score / ((5+len)/6)^alpha.
+
+    Host-side (numpy-friendly) helper used at beam-group retirement;
+    ``alpha = 0`` reduces to raw cumulative log-prob.
+    """
+    import numpy as np
+    scores = np.asarray(scores, np.float64)
+    lengths = np.maximum(np.asarray(lengths, np.float64), 1.0)
+    lp = ((5.0 + lengths) / 6.0) ** alpha
+    return scores / lp
+
+
+# ---------------------------------------------------------------------------
+# self-speculation: accept/reject a drafted token block
+# ---------------------------------------------------------------------------
+
+def speculative_accept(key, draft_toks, q_logits, p_logits, tgt_raw_argmax,
+                       greedy):
+    """Leviathan/Chen rejection sampling over a drafted block, vectorized.
+
+    Args:
+      key:        PRNG key (consumed for accept coins + residual draws).
+      draft_toks: [B, K] i32 tokens proposed by the draft view.
+      q_logits:   [B, K, V] draft logits after the slot's own sampling mask
+                  (``sampler.mask_logits``) — softmaxed here into q.
+      p_logits:   [B, K+1, V] masked target logits for the same positions
+                  plus the bonus position K — softmaxed here into p.
+      tgt_raw_argmax: [B, K+1] i32 argmax of the RAW (unmasked, unscaled)
+                  target logits. Greedy agreement/replacement uses this,
+                  not argmax(p): plain greedy decode takes argmax of raw
+                  logits, and re-deriving it through a softmax could round
+                  two near-ties onto the same float and flip the winner —
+                  bit-exactness demands the identical reduction.
+      greedy:     [B] bool — slot decodes greedily (temperature <= 0).
+
+    Returns ``(accept, repl, bonus)``:
+      accept [B, K] bool — draft token j survives verification;
+      repl   [B, K] i32  — the token to emit at the first rejected j
+                           (exact residual draw, or argmax for greedy);
+      bonus  [B] i32     — the free K-th token when every draft survives.
+
+    Greedy slots use exact argmax agreement (accept iff the draft token IS
+    the target argmax, replacement IS the target argmax), which makes the
+    emitted chain identical to plain greedy decoding token-for-token. For
+    stochastic slots the emitted tokens are distributed exactly as the
+    target's masked distribution (accept w.p. min(1, p/q), residual
+    ``max(p-q, 0)`` renormalized).
+    """
+    bsz, k, v = q_logits.shape
+    tgt_argmax = tgt_raw_argmax[:, :k]                  # [B, K]
+    acc_greedy = draft_toks == tgt_argmax
+
+    def _greedy_only(key):
+        # every slot is greedy: accept is exact argmax agreement, the
+        # replacement IS the target argmax, no distribution work at all.
+        # The full branch computes the same values for greedy rows (its
+        # final where() picks the argmax side), so runtime-skipping the
+        # softmax/categorical machinery cannot change any output.
+        return acc_greedy, tgt_argmax, tgt_raw_argmax[:, k]
+
+    def _full(key):
+        kc, kr, kb = jax.random.split(key, 3)
+        p_dist = jax.nn.softmax(p_logits, axis=-1)      # [B, K+1, V]
+        q_dist = jax.nn.softmax(q_logits, axis=-1)      # [B, K, V]
+        p_k = p_dist[:, :k, :]
+
+        p_tok = jnp.take_along_axis(p_k, draft_toks[..., None],
+                                    axis=-1)[..., 0]
+        q_tok = jnp.take_along_axis(q_dist, draft_toks[..., None],
+                                    axis=-1)[..., 0]
+        u = jax.random.uniform(kc, (bsz, k))
+        acc_stoch = u * jnp.maximum(q_tok, 1e-30) < p_tok
+        accept = jnp.where(greedy[:, None], acc_greedy, acc_stoch)
+
+        # residual distribution max(p - q, 0); exactly-zero residual
+        # (p == q) falls back to p so the draw stays well-defined
+        res = jnp.maximum(p_k - q_dist, 0.0)
+        res_mass = jnp.sum(res, axis=-1, keepdims=True)
+        res = jnp.where(res_mass > 0.0,
+                        res / jnp.maximum(res_mass, 1e-30), p_k)
+        r_stoch = jax.random.categorical(
+            kr, jnp.log(jnp.maximum(res, 1e-30)), axis=-1).astype(jnp.int32)
+        repl = jnp.where(greedy[:, None], tgt_argmax, r_stoch)
+
+        bonus_stoch = jax.random.categorical(
+            kb, jnp.log(jnp.maximum(p_dist[:, k, :], 1e-30)),
+            axis=-1).astype(jnp.int32)
+        bonus = jnp.where(greedy, tgt_raw_argmax[:, k], bonus_stoch)
+        return accept, repl, bonus
+
+    return jax.lax.cond(jnp.all(greedy), _greedy_only, _full, key)

@@ -47,10 +47,11 @@ Known edges (documented, covered by tests):
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 import warnings
 from collections import deque
-from typing import Any, Deque, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,8 +62,8 @@ from repro.configs.registry import ArchConfig
 from repro.distributed import sharding as shrules
 from repro.distributed.sharding import AxisPlan, plan_scope
 from repro.models import api, kvcache
-from repro.serving import blockpool
-from repro.serving.sampler import sample
+from repro.serving import blockpool, decoding
+from repro.serving.sampler import mask_logits, sample
 
 
 @dataclasses.dataclass
@@ -73,8 +74,13 @@ class Request:
     temperature: float = 0.0           # <= 0 -> greedy
     top_k: int = 0                     # 0 -> disabled
     top_p: float = 1.0                 # >= 1 -> disabled
+    decoding: str = "greedy"           # greedy | sample | beam[:W] | spec
     done: bool = False
     output: Optional[List[int]] = None
+    beams: Optional[List[Tuple[List[int], float]]] = None  # beam mode: all
+    # retired hypotheses as (tokens, length-normalized score), best first
+    spec_stats: Optional[Dict[str, int]] = None  # spec mode: verify_steps /
+    # accepted_draft_tokens for this request
 
 
 @dataclasses.dataclass
@@ -93,6 +99,11 @@ class EngineState:
     temperature: jax.Array  # [B] f32  per-slot sampling params
     top_k: jax.Array        # [B] i32
     top_p: jax.Array        # [B] f32
+    mode: jax.Array         # [B] i32  decoding kind (decoding.NORMAL/BEAM/SPEC)
+    beam_group: jax.Array   # [B] i32  beam-group id (leader slot idx); -1 none
+    beam_score: jax.Array   # [B] f32  cumulative hypothesis log-prob
+    spec_steps: jax.Array   # [B] i32  verify rounds run by this occupant
+    spec_accepted: jax.Array  # [B] i32 draft tokens accepted+emitted
     key: jax.Array          # PRNG key
     page_table: jax.Array   # [B, blocks_per_slot] i32 pool block per logical
                             # page (paged mode; [B, 1] zeros when dense)
@@ -102,7 +113,9 @@ class EngineState:
 jax.tree_util.register_dataclass(
     EngineState,
     data_fields=["pos", "budget", "last_tok", "active", "temperature",
-                 "top_k", "top_p", "key", "page_table", "caches"],
+                 "top_k", "top_p", "mode", "beam_group", "beam_score",
+                 "spec_steps", "spec_accepted", "key", "page_table",
+                 "caches"],
     meta_fields=[])
 
 
@@ -115,7 +128,10 @@ class ServingEngine:
                  num_cache_blocks: Optional[int] = None,
                  prefix_cache: bool = False,
                  kv_cache_dtype: Optional[str] = None,
-                 plan: Optional[AxisPlan] = None):
+                 plan: Optional[AxisPlan] = None,
+                 spec_k: int = 4,
+                 spec_draft_planes: Optional[int] = None,
+                 beam_length_alpha: float = 0.6):
         self.cfg = cfg
         # Tensor/data-parallel serving: ``plan`` shards the packed weights
         # (named_sharding_tree), the engine state and the cache pool across
@@ -129,7 +145,11 @@ class ServingEngine:
                 params, shrules.named_sharding_tree(params, plan))
         elif (cfg.quant and jax.default_backend() == "cpu"
               and cfg.quant.get("mpgemm_mode", "lut_xla") == "lut_xla"
-              and cfg.quant.get("store") is None):
+              and cfg.quant.get("store") is None
+              and spec_draft_planes is None):
+            # (self-speculation pins the packed store: the draft view is a
+            # plane slice of the packed buffer, which the CW expansion
+            # destroys — see plane_sliced_params)
             # Single-device CPU serving: the XLA LUT path has no hardware
             # lookup unit, so a packed store forces a packed->CW expansion
             # inside every decode step. Hoist it: convert once to the
@@ -173,6 +193,30 @@ class ServingEngine:
         s2 = jax.eval_shape(
             lambda: api.init_cache(cfg, 1, 32, dtype=self._cache_dtype))
         self._seq_axes = kvcache.seq_axes(s1, s2)
+        # self-speculation rewrites cache POSITIONS (draft writes are
+        # overwritten by the verify forward, rejected suffixes by the next
+        # round) — only valid when every cache leaf is positional. SSM /
+        # conv state is cumulative and cannot rewind a rejected token.
+        self._spec_ok = all(sax >= 0
+                            for sax in jax.tree.leaves(self._seq_axes))
+
+        # ---- decoding-mode zoo (serving/decoding.py) ----------------------
+        self.spec_k = max(1, int(spec_k))
+        self.spec_draft_planes = spec_draft_planes
+        self.beam_length_alpha = float(beam_length_alpha)
+        self.draft_params = None
+        self.draft_extra_hbm_bytes = 0
+        if spec_draft_planes is not None:
+            from repro.models import quantized as qz
+            self.draft_params = qz.plane_sliced_params(
+                self.params, int(spec_draft_planes))
+            # acceptance probe: the draft view must share every buffer with
+            # the target by identity (zero extra weight HBM)
+            self.draft_extra_hbm_bytes = qz.extra_hbm_bytes(
+                self.draft_params, self.params)
+        # compiled decode variants keyed by the pool's static mode mix
+        # (has_beam, has_spec); (False, False) is the legacy self._decode
+        self._decode_variants: Dict[Tuple[bool, bool], Any] = {}
         # zero batch-1 slot caches: the prefill starting point for every
         # admit (a retiring request's state must never leak into its slot's
         # next occupant — SSM states are cumulative)
@@ -254,6 +298,8 @@ class ServingEngine:
         # latency at large decode_chunk settings
         self._decode = jax.jit(self._decode_chunk_impl, donate_argnums=(1,))
         self._prefill = jax.jit(self._prefill_chunk_impl)
+        # beam admission fork: copy one slot's unpooled cache rows to another
+        self._fork_slot = jax.jit(self._fork_slot_impl, donate_argnums=(0,))
         self._merge = jax.jit(
             lambda caches, slot, i: kvcache.merge_batch(
                 caches, slot, self._axes, i))
@@ -289,6 +335,11 @@ class ServingEngine:
             temperature=jnp.zeros(b, jnp.float32),
             top_k=jnp.zeros(b, jnp.int32),
             top_p=jnp.ones(b, jnp.float32),
+            mode=jnp.zeros(b, jnp.int32),
+            beam_group=jnp.full(b, -1, jnp.int32),
+            beam_score=jnp.zeros(b, jnp.float32),
+            spec_steps=jnp.zeros(b, jnp.int32),
+            spec_accepted=jnp.zeros(b, jnp.int32),
             key=jax.random.key(seed),
             page_table=page_table,
             caches=caches)
@@ -307,6 +358,12 @@ class ServingEngine:
         self.admit_blocked = 0      # admissions deferred for lack of blocks
         self.occupancy_samples: List[float] = []  # slot occupancy per chunk
         self.peak_active_slots = 0
+        # decoding-mode bookkeeping (host mirrors of per-slot device state)
+        self._slot_kind: List[int] = [decoding.NORMAL] * b
+        self._beam_hist: List[List[int]] = [[] for _ in range(b)]
+        self._beam_groups: Dict[int, Dict[str, Any]] = {}  # leader -> group
+        self.spec_verify_steps = 0      # totals over retired spec requests
+        self.spec_accepted_tokens = 0
 
     def _engine_state_shardings(self, state: EngineState) -> EngineState:
         """NamedSharding pytree for the engine state under ``self.plan``.
@@ -352,7 +409,11 @@ class ServingEngine:
             pos=vec(state.pos), budget=vec(state.budget),
             last_tok=vec(state.last_tok), active=vec(state.active),
             temperature=vec(state.temperature), top_k=vec(state.top_k),
-            top_p=vec(state.top_p), key=rep,
+            top_p=vec(state.top_p), mode=vec(state.mode),
+            beam_group=vec(state.beam_group),
+            beam_score=vec(state.beam_score),
+            spec_steps=vec(state.spec_steps),
+            spec_accepted=vec(state.spec_accepted), key=rep,
             page_table=vec(state.page_table), caches=caches_sh)
 
     # -- jitted programs ----------------------------------------------------
@@ -389,6 +450,230 @@ class ServingEngine:
                                                keepdims=True)
             return jax.lax.dynamic_update_slice_in_dim(c, blk, dst, axis=bax)
         return jax.tree.map(one, caches, self._axes, self._seq_axes)
+
+    def _fork_slot_impl(self, caches, src, dst):
+        """Beam admission fork: copy slot ``src``'s cache row to ``dst`` on
+        every slot-resident (unpooled) leaf. Pooled leaves pass through —
+        the member's page-table row handles those (shared prefix blocks by
+        reference, private blocks by ``_copy_block``)."""
+        pooled = (self._pooled if self.paged
+                  else jax.tree.map(lambda _: False, self._axes))
+
+        def one(c, bax, is_pooled):
+            if is_pooled:
+                return c
+            row = jax.lax.dynamic_index_in_dim(c, src, axis=bax,
+                                               keepdims=True)
+            return jax.lax.dynamic_update_slice_in_dim(c, row, dst, axis=bax)
+        return jax.tree.map(one, caches, self._axes, pooled)
+
+    def _beam_fork_caches(self, caches, parent, page_table, do_copy):
+        """In-scan beam reassignment: slot ``b`` adopts ``parent[b]``'s
+        hypothesis state. Runs AFTER the step's forward, so the adopted
+        content includes the parent's freshly written position.
+
+        Unpooled leaves: batch gather by ``parent`` (identity rows for
+        non-forking slots). Pooled leaves: the slot's page-table row is
+        immutable inside the scan, so the fork copies block CONTENT from
+        the parent's blocks into the slot's own blocks. Duplicate
+        destinations are safe by construction: group members share
+        identical prefix rows (those writes are value-identical
+        self-copies), post-divergence blocks are private per slot, and
+        non-forking slots are routed to the never-read null block 0.
+        """
+        pooled = (self._pooled if self.paged
+                  else jax.tree.map(lambda _: False, self._axes))
+        bsz = parent.shape[0]
+
+        def one(c, bax, is_pooled):
+            cm = jnp.moveaxis(c, bax, 0)
+            if is_pooled:
+                src_rows = page_table[parent].reshape(-1)      # [B*nbs]
+                dst_rows = jnp.where(do_copy[:, None], page_table,
+                                     0).reshape(-1)
+                cm = cm.at[dst_rows].set(cm[src_rows])
+            else:
+                cm = cm[parent]
+            return jnp.moveaxis(cm, 0, bax)
+        del bsz
+        return jax.tree.map(one, caches, self._axes, pooled)
+
+    def _get_decode(self, has_beam: bool, has_spec: bool):
+        """Compiled decode-chunk program for a pool mode mix. The
+        (False, False) mix is the legacy two-arg ``self._decode``; the
+        others share ``_decode_general_impl`` with the mode flags baked in
+        as trace-time statics (signature: (params, draft_params, state))."""
+        key = (has_beam, has_spec)
+        fn = self._decode_variants.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(self._decode_general_impl,
+                                           has_beam=has_beam,
+                                           has_spec=has_spec),
+                         donate_argnums=(2,))
+            self._decode_variants[key] = fn
+        return fn
+
+    def _decode_general_impl(self, params, draft_params, state, *,
+                             has_beam: bool, has_spec: bool):
+        """Decoding-mode-zoo decode chunk: N scan steps over the pool with
+        per-slot NORMAL / BEAM / SPEC behaviour in one jitted program.
+
+        Emissions are ``[N, B, S_e]`` (``S_e = spec_k + 1`` when the pool
+        holds spec slots, else 1) plus a ``[N, B]`` parent map for beam
+        hypothesis reconstruction on the host.
+
+        Speculative step anatomy (spec slots; every other slot rides along
+        emitting at most its position-0 token):
+          1. draft K tokens autoregressively with the plane-sliced view,
+             writing PROVISIONAL KV at pos..pos+K-1;
+          2. ONE s=K+1 target forward over [last_tok, d_0..d_{K-1}]
+             re-writes pos..pos+K with target KV (the draft writes are
+             fully overwritten — rejected positions hold invisible values
+             that the next round re-writes before any read reaches them);
+          3. accept the longest agreeing prefix (argmax agreement for
+             greedy slots — bit-exact with plain greedy — or Leviathan
+             rejection sampling), emit the replacement/bonus token, and
+             advance ``pos`` by the emission count.
+        """
+        paged_kw = ({"page_table": state.page_table} if self.paged else {})
+        k_spec = self.spec_k
+        s_e = (k_spec + 1) if has_spec else 1
+        bsz = self.max_batch
+        self_idx = jnp.arange(bsz, dtype=jnp.int32)
+
+        def step(st, _):
+            key, k_draft, k_accept, k_sample = jax.random.split(st.key, 4)
+            greedy = st.temperature <= 0.0
+            is_spec = st.mode == decoding.SPEC
+            is_beam = st.mode == decoding.BEAM
+
+            if has_spec:
+                # ---- 1. draft rollout (sliced-plane view) ---------------
+                caches = st.caches
+                last, dpos = st.last_tok, st.pos
+                dkeys = jax.random.split(k_draft, k_spec)
+                d_toks, d_masked = [], []
+                for j in range(k_spec):
+                    dl, caches, _ = api.forward(
+                        draft_params, {"tokens": last[:, None]}, self.cfg,
+                        caches=caches, cache_pos=dpos, **paged_kw)
+                    dl = dl[:, -1]
+                    ml = mask_logits(dl, temperature=st.temperature,
+                                     top_k=st.top_k, top_p=st.top_p)
+                    d = jnp.where(
+                        greedy,
+                        jnp.argmax(dl, axis=-1).astype(jnp.int32),
+                        jax.random.categorical(dkeys[j], ml,
+                                               axis=-1).astype(jnp.int32))
+                    d_toks.append(d)
+                    d_masked.append(ml)
+                    last, dpos = d, dpos + 1
+                d_toks = jnp.stack(d_toks, axis=1)          # [B, K]
+                q_logits = jnp.stack(d_masked, axis=1)      # [B, K, V]
+
+                # ---- 2. single verify forward (overwrites draft KV) -----
+                verify_in = jnp.concatenate(
+                    [st.last_tok[:, None], d_toks], axis=1)  # [B, K+1]
+                vlogits, new_caches, _ = api.forward(
+                    params, {"tokens": verify_in}, self.cfg,
+                    caches=caches, cache_pos=st.pos, **paged_kw)
+                logits1 = vlogits[:, 0]  # == the s=1 forward's logits
+                tgt_raw_argmax = jnp.argmax(vlogits,
+                                            axis=-1).astype(jnp.int32)
+                p_logits = jnp.stack(
+                    [mask_logits(vlogits[:, j],
+                                 temperature=st.temperature,
+                                 top_k=st.top_k, top_p=st.top_p)
+                     for j in range(k_spec + 1)], axis=1)
+                accept, repl, bonus = decoding.speculative_accept(
+                    k_accept, d_toks, q_logits, p_logits, tgt_raw_argmax,
+                    greedy)
+            else:
+                logits, new_caches, _ = api.forward(
+                    params, {"tokens": st.last_tok[:, None]}, self.cfg,
+                    caches=st.caches, cache_pos=st.pos, **paged_kw)
+                logits1 = logits[:, -1]
+
+            # ---- position-0 token per mode ------------------------------
+            nxt_norm = sample(k_sample, logits1, temperature=st.temperature,
+                              top_k=st.top_k, top_p=st.top_p)
+            parent = self_idx
+            beam_score = st.beam_score
+            if has_beam:
+                logp = jax.nn.log_softmax(logits1.astype(jnp.float32),
+                                          axis=-1)
+                live_beam = is_beam & st.active
+                parent, btok, beam_score = decoding.beam_select(
+                    st.beam_score, logp, live_beam, st.beam_group)
+                new_caches = self._beam_fork_caches(
+                    new_caches, parent, st.page_table, live_beam)
+                tok0_ride = jnp.where(is_beam, btok, nxt_norm)
+            else:
+                tok0_ride = nxt_norm
+
+            # ---- emission chain -----------------------------------------
+            toks_l, valid_l = [], []
+            cum = jnp.ones(bsz, bool)
+            prior_eos = jnp.zeros(bsz, bool)
+            n_emit = jnp.zeros(bsz, jnp.int32)
+            acc_emitted = jnp.zeros(bsz, jnp.int32)
+            for j in range(s_e):
+                if has_spec:
+                    if j < k_spec:
+                        tok_j = jnp.where(accept[:, j], d_toks[:, j],
+                                          repl[:, j])
+                    else:
+                        tok_j = bonus
+                    if j == 0:
+                        tok_j = jnp.where(is_spec, tok_j, tok0_ride)
+                else:
+                    tok_j = tok0_ride
+                allow = (cum & st.active & (st.pos + 1 + j < self.max_seq)
+                         & (st.budget > j) & ~prior_eos)
+                if j > 0:
+                    allow &= is_spec
+                if self.eos_id is not None:
+                    prior_eos = prior_eos | (allow & (tok_j == self.eos_id))
+                toks_l.append(tok_j)
+                valid_l.append(allow)
+                n_emit = n_emit + allow.astype(jnp.int32)
+                if has_spec and j < k_spec:
+                    acc_emitted = acc_emitted + (
+                        allow & accept[:, j] & is_spec).astype(jnp.int32)
+                    cum = cum & accept[:, j]
+            toks_m = jnp.stack(toks_l, axis=1)    # [B, S_e]
+            valid_m = jnp.stack(valid_l, axis=1)  # [B, S_e]
+
+            # ---- slot state update --------------------------------------
+            emitted = n_emit > 0
+            last_idx = jnp.clip(n_emit - 1, 0, s_e - 1)
+            last_emitted = jnp.take_along_axis(
+                toks_m, last_idx[:, None], axis=1)[:, 0]
+            new_last = jnp.where(emitted, last_emitted, st.last_tok)
+            new_pos = st.pos + n_emit
+            hit_cap = st.active & (st.pos + 1 >= self.max_seq)
+            new_budget = jnp.where(hit_cap, 0, st.budget - n_emit)
+            new_active = st.active & emitted & (new_budget > 0) & ~prior_eos
+
+            ran_spec = is_spec & st.active & emitted
+            st = dataclasses.replace(
+                st,
+                pos=new_pos,
+                budget=new_budget,
+                last_tok=new_last,
+                active=new_active,
+                beam_score=beam_score,
+                spec_steps=st.spec_steps + ran_spec.astype(jnp.int32),
+                spec_accepted=st.spec_accepted + jnp.where(ran_spec,
+                                                           acc_emitted, 0),
+                key=key,
+                caches=new_caches)
+            return st, (toks_m, valid_m, parent)
+
+        with plan_scope(self.plan):
+            state, (toks, valid, parent) = jax.lax.scan(
+                step, state, None, length=self.decode_chunk)
+        return state, toks, valid, parent  # [N, B, S_e], [N, B]
 
     def _decode_chunk_impl(self, params, state):
         """N decode steps for the whole pool in one dispatch."""
@@ -428,6 +713,24 @@ class ServingEngine:
 
     # -- host loop (chunk boundaries only) ----------------------------------
     def submit(self, req: Request):
+        # parse eagerly so a bad decoding string / unsupported mode fails at
+        # submit time, not mid-batch at admission
+        dm = decoding.parse(req.decoding)
+        if dm.kind == decoding.SPEC:
+            if self.draft_params is None:
+                raise ValueError(
+                    "spec decoding needs a draft view: construct the engine "
+                    "with spec_draft_planes=<planes> (and a packed-store "
+                    "quant config)")
+            if not self._spec_ok:
+                raise ValueError(
+                    f"self-speculative decoding unsupported for family "
+                    f"{self.cfg.family!r}: its cache holds cumulative "
+                    "(SSM/conv) state that cannot rewind rejected drafts")
+        if dm.kind == decoding.BEAM and dm.beam_width > self.max_batch:
+            raise ValueError(
+                f"beam width {dm.beam_width} exceeds max_batch "
+                f"{self.max_batch}: the W hypotheses are W pool slots")
         req.output = []
         self.queue.append(req)
 
@@ -441,10 +744,19 @@ class ServingEngine:
         return prompt
 
     def _set_slot(self, i: int, req: Request, prompt, caches, **extra):
-        """Common admission epilogue: per-slot control state + caches."""
+        """Common admission epilogue: per-slot control state + caches.
+
+        Decoding-mode state is reset from ``req.decoding`` every admission
+        (beam MEMBER slots are stamped separately — this path admits the
+        group leader, whose group id is its own slot index and whose
+        cumulative score starts at 0 while members start at -inf, so the
+        first expansion step fans the leader out into the full width).
+        """
         st = self.state
         plen = int(prompt.size)
         live = req.max_new_tokens > 0
+        dm = decoding.parse(req.decoding)
+        group = i if dm.kind == decoding.BEAM else -1
         self.state = dataclasses.replace(
             st,
             pos=st.pos.at[i].set(plen - 1),
@@ -454,12 +766,60 @@ class ServingEngine:
             temperature=st.temperature.at[i].set(float(req.temperature)),
             top_k=st.top_k.at[i].set(int(req.top_k)),
             top_p=st.top_p.at[i].set(float(req.top_p)),
+            mode=st.mode.at[i].set(dm.kind),
+            beam_group=st.beam_group.at[i].set(group),
+            beam_score=st.beam_score.at[i].set(0.0),
+            spec_steps=st.spec_steps.at[i].set(0),
+            spec_accepted=st.spec_accepted.at[i].set(0),
             caches=caches, **extra)
+        self._slot_kind[i] = dm.kind
+        self._beam_hist[i] = []
         if live:
             self.slots[i] = req
         else:
             req.done = True  # nothing to generate
         return live
+
+    def _stamp_beam_member(self, m: int, lead: int, req: Request, prompt):
+        """Per-slot state for a beam MEMBER: same position/budget/params as
+        the leader, score -inf so the first ``beam_select`` replaces it with
+        one of the leader's top-W continuations."""
+        st = self.state
+        plen = int(prompt.size)
+        self.state = dataclasses.replace(
+            st,
+            pos=st.pos.at[m].set(plen - 1),
+            budget=st.budget.at[m].set(req.max_new_tokens),
+            last_tok=st.last_tok.at[m].set(int(prompt[-1])),
+            active=st.active.at[m].set(True),
+            temperature=st.temperature.at[m].set(float(req.temperature)),
+            top_k=st.top_k.at[m].set(int(req.top_k)),
+            top_p=st.top_p.at[m].set(float(req.top_p)),
+            mode=st.mode.at[m].set(decoding.BEAM),
+            beam_group=st.beam_group.at[m].set(lead),
+            beam_score=st.beam_score.at[m].set(decoding._NEG),
+            spec_steps=st.spec_steps.at[m].set(0),
+            spec_accepted=st.spec_accepted.at[m].set(0))
+        self.slots[m] = req
+        self._slot_kind[m] = decoding.BEAM
+        self._beam_hist[m] = []
+
+    def _evict_slot(self, i: int):
+        """Admission rollback / group retirement: release slot ``i``'s
+        reservation and deactivate it (request bookkeeping is the caller's
+        problem)."""
+        if self.paged:
+            for bid in self._slot_blocks[i]:
+                self._alloc.decref(bid)
+            self._slot_blocks[i] = []
+            self.state = dataclasses.replace(
+                self.state,
+                page_table=self.state.page_table.at[i].set(0))
+        self.state = dataclasses.replace(
+            self.state, active=self.state.active.at[i].set(False))
+        self.slots[i] = None
+        self._slot_kind[i] = decoding.NORMAL
+        self._beam_hist[i] = []
 
     def _admit_one(self, i: int, req: Request):
         prompt = self._truncate(req)
@@ -621,23 +981,98 @@ class ServingEngine:
                 self.state, page_table=self.state.page_table.at[i].set(0))
         return True
 
+    def _admit_beam(self, slots_w: List[int], req: Request) -> bool:
+        """Admit a beam request into ``len(slots_w)`` slots: leader via the
+        ordinary admission path (prefill once), members fork the leader —
+        shared-prefix blocks by reference plus private-block content copies
+        in paged mode (the PR-7 COW fan-out), full cache-row copies for
+        unpooled leaves. Returns False (request left queued, engine rolled
+        back) if the pool cannot grant every member's reservation."""
+        lead = slots_w[0]
+        if self.paged:
+            if not self._admit_one_paged(lead, req):
+                return False
+        else:
+            self._admit_one(lead, req)
+        prompt = self._truncate(req)
+        stamped = [lead]
+        for m in slots_w[1:]:
+            if self.paged:
+                lead_row = self._slot_blocks[lead]
+                # blocks strictly below the first decode write (plen-1) are
+                # immutable for the rest of the group's life: share them by
+                # reference. The divergence block and everything after is
+                # per-hypothesis mutable -> private content copy.
+                m_share = min((int(prompt.size) - 1) // self.cache_block_size,
+                              len(lead_row))
+                n_priv = len(lead_row) - m_share
+                blocks = self._alloc.alloc(n_priv)
+                if blocks is None and self._prefix is not None:
+                    self._prefix.evict_until(n_priv)
+                    blocks = self._alloc.alloc(n_priv)
+                if blocks is None:
+                    for s in stamped:
+                        self._evict_slot(s)
+                    return False
+                for bid in lead_row[:m_share]:
+                    self._alloc.incref(bid)
+                caches = self.state.caches
+                for src, dst in zip(lead_row[m_share:], blocks):
+                    caches = self._copy_block(caches, np.int32(src),
+                                              np.int32(dst))
+                row = lead_row[:m_share] + blocks
+                self._slot_blocks[m] = list(row)
+                row_arr = np.zeros(self.blocks_per_slot, np.int32)
+                row_arr[:len(row)] = row
+                self.state = dataclasses.replace(
+                    self.state,
+                    page_table=self.state.page_table.at[m].set(
+                        jnp.asarray(row_arr)),
+                    caches=self._fork_slot(caches, np.int32(lead),
+                                           np.int32(m)))
+            else:
+                self.state = dataclasses.replace(
+                    self.state,
+                    caches=self._fork_slot(self.state.caches, np.int32(lead),
+                                           np.int32(m)))
+            self._stamp_beam_member(m, lead, req, prompt)
+            stamped.append(m)
+        self._beam_groups[lead] = {
+            "req": req, "slots": list(slots_w),
+            "live": set(slots_w), "finished": []}
+        return True
+
     def _admit(self) -> int:
         n = 0
-        for i in range(self.max_batch):
-            if self.slots[i] is not None or not self.queue:
-                continue
+        while self.queue:
             req = self.queue[0]
+            dm = decoding.parse(req.decoding)
+            width = (dm.beam_width
+                     if dm.kind == decoding.BEAM and req.max_new_tokens > 0
+                     else 1)
+            free = [i for i, r in enumerate(self.slots) if r is None]
+            if len(free) < width:
+                break  # FIFO head-of-line: wait for slots to free
             self.admit_attempts += 1
-            if self.paged:
-                if not self._admit_one_paged(i, req):
+            if dm.kind == decoding.BEAM and req.max_new_tokens > 0:
+                if not self._admit_beam(free[:width], req):
                     self.admit_blocked += 1
-                    break  # FIFO head-of-line: wait for blocks to free
-                self.queue.popleft()
+                    break  # wait for blocks to free
+            elif self.paged:
+                if not self._admit_one_paged(free[0], req):
+                    self.admit_blocked += 1
+                    break
             else:
-                self.queue.popleft()
-                self._admit_one(i, req)
+                self._admit_one(free[0], req)
+            self.queue.popleft()
             n += 1
         return n
+
+    def _find_beam_group(self, i: int) -> Optional[Dict[str, Any]]:
+        for g in self._beam_groups.values():
+            if i in g["slots"]:
+                return g
+        return None
 
     def step(self) -> bool:
         """One chunk cycle: admit, decode N tokens/slot, retire."""
@@ -655,10 +1090,27 @@ class ServingEngine:
                     f"{self.num_cache_blocks}, block={self.cache_block_size})")
             return admitted > 0
         self.occupancy_samples.append(occ / self.max_batch)
+        # decode-variant dispatch on the pool's current mode mix: a pure
+        # NORMAL pool runs the legacy two-arg program unchanged (same AOT
+        # artifact bench_serving compiles); beam/spec pools run the general
+        # program with the matching static flags
+        has_beam = any(self._slot_kind[i] == decoding.BEAM for i in occupied)
+        has_spec = any(self._slot_kind[i] == decoding.SPEC for i in occupied)
         t0 = time.perf_counter()
-        self.state, toks, valid = self._decode(self.params, self.state)
-        toks, valid, alive = jax.device_get(
-            (toks, valid, self.state.active))  # THE once-per-chunk sync
+        if not (has_beam or has_spec):
+            self.state, toks, valid = self._decode(self.params, self.state)
+            toks, valid, alive = jax.device_get(
+                (toks, valid, self.state.active))  # THE once-per-chunk sync
+            toks, valid = toks[:, :, None], valid[:, :, None]  # [N, B, 1]
+            parent = scores = sst = sacc = None
+        else:
+            fn = self._get_decode(has_beam, has_spec)
+            dp = self.draft_params if has_spec else self.params
+            self.state, toks, valid, parent = fn(self.params, dp, self.state)
+            toks, valid, parent, alive, scores, sst, sacc = jax.device_get(
+                (toks, valid, parent, self.state.active,
+                 self.state.beam_score, self.state.spec_steps,
+                 self.state.spec_accepted))  # still ONE sync per chunk
         self.decode_syncs += 1
         self.chunk_latencies.append(time.perf_counter() - t0)
         if self.paged and self._pending_keys:
@@ -667,16 +1119,69 @@ class ServingEngine:
             # to fully shareable
             self._pending_keys.clear()
         for n in range(toks.shape[0]):
-            for i in occupied:
-                if valid[n, i]:
-                    self.slots[i].output.append(int(toks[n, i]))
+            if has_beam:
+                # hypothesis histories fork exactly like the device caches:
+                # read every parent's history BEFORE committing any
+                moved = {}
+                for i in occupied:
+                    if self._slot_kind[i] == decoding.BEAM and valid[n, i, 0]:
+                        moved[i] = list(self._beam_hist[parent[n, i]])
+                for i, hist in moved.items():
+                    hist.append(int(toks[n, i, 0]))
+                    self._beam_hist[i] = hist
                     self.decode_tokens += 1
+            for i in occupied:
+                if self._slot_kind[i] == decoding.BEAM:
+                    continue  # recorded above (hypotheses fork, not append)
+                for j in range(valid.shape[2]):
+                    if valid[n, i, j]:
+                        self.slots[i].output.append(int(toks[n, i, j]))
+                        self.decode_tokens += 1
         retired = []
         for i in occupied:
-            if not alive[i]:
-                self.slots[i].done = True
-                self.slots[i] = None  # retire -> refillable next boundary
-                retired.append(i)
+            if alive[i]:
+                continue
+            kind = self._slot_kind[i]
+            if kind == decoding.BEAM:
+                # freeze the finished hypothesis; the slot stays reserved
+                # (not refillable) until every group member retires, so the
+                # group id — the leader's slot index — stays unambiguous
+                g = self._find_beam_group(i)
+                if g is not None and i in g["live"]:
+                    g["live"].discard(i)
+                    g["finished"].append(
+                        (list(self._beam_hist[i]), float(scores[i])))
+                continue
+            req = self.slots[i]
+            if kind == decoding.SPEC:
+                vs, at = int(sst[i]), int(sacc[i])
+                req.spec_stats = {"verify_steps": vs,
+                                  "accepted_draft_tokens": at}
+                self.spec_verify_steps += vs
+                self.spec_accepted_tokens += at
+            req.done = True
+            self.slots[i] = None  # retire -> refillable next boundary
+            retired.append(i)
+        # beam groups with no live hypothesis left: rank and retire together
+        for lead in list(self._beam_groups):
+            g = self._beam_groups[lead]
+            if g["live"]:
+                continue
+            req = g["req"]
+            hyps = g["finished"]
+            norm = decoding.rank_hypotheses(
+                [s for _, s in hyps], [len(t) for t, _ in hyps],
+                self.beam_length_alpha)
+            order = np.argsort(-np.asarray(norm), kind="stable")
+            req.beams = [(list(hyps[k][0]), float(norm[k])) for k in order]
+            req.output = list(req.beams[0][0]) if req.beams else []
+            req.done = True
+            for m in g["slots"]:
+                self.slots[m] = None
+                self._slot_kind[m] = decoding.NORMAL
+                self._beam_hist[m] = []
+                retired.append(m)
+            del self._beam_groups[lead]
         if self.paged and retired:
             for i in retired:
                 for bid in self._slot_blocks[i]:
@@ -781,4 +1286,35 @@ class ServingEngine:
                     "misses": self._prefix.misses,
                     "evictions": self._prefix.evictions,
                 }
+        if self.draft_params is not None:
+            # retired totals plus the still-occupied spec slots' live
+            # counters (stats() is a rare observability call, so the extra
+            # sync here does not count against the decode loop's one/chunk)
+            sst, sacc = jax.device_get(
+                (self.state.spec_steps, self.state.spec_accepted))
+            vs = self.spec_verify_steps + sum(
+                int(sst[i]) for i in range(self.max_batch)
+                if self.slots[i] is not None
+                and self._slot_kind[i] == decoding.SPEC)
+            at = self.spec_accepted_tokens + sum(
+                int(sacc[i]) for i in range(self.max_batch)
+                if self.slots[i] is not None
+                and self._slot_kind[i] == decoding.SPEC)
+            out["spec"] = {
+                "spec_k": self.spec_k,
+                "draft_planes": int(self.spec_draft_planes),
+                "draft_extra_hbm_bytes": int(self.draft_extra_hbm_bytes),
+                "verify_steps": vs,
+                "accepted_draft_tokens": at,
+                # +1 for the verify forward's own token (replacement or
+                # bonus): tokens emitted per verify round
+                "mean_emitted_per_step": ((at + vs) / max(1, vs)),
+                "mean_accepted_per_step": at / max(1, vs),
+            }
+        if self._beam_groups or any(
+                k == decoding.BEAM for k in self._slot_kind):
+            out["beam"] = {
+                "active_groups": len(self._beam_groups),
+                "length_alpha": self.beam_length_alpha,
+            }
         return out

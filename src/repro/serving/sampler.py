@@ -1,19 +1,25 @@
 """Token samplers: greedy / temperature / top-k / top-p, jit-friendly.
 
-Two entry modes through one function:
+One masking implementation serves every caller:
 
-  * static python scalars — the historical path: ``temperature <= 0`` short-
-    circuits to argmax at trace time (no sort, no PRNG use), top-k/top-p are
-    applied only when enabled.  This is what single-request callers and the
-    greedy decode fast path use.
-  * array-valued per-slot params — ``temperature``/``top_k``/``top_p`` may be
-    [B] arrays (or traced scalars), one entry per batch slot.  Every slot is
-    masked independently inside one jitted program: the continuous-batching
-    engine runs a pool where each request carries its own sampling config,
-    so the decode scan cannot branch on python values.  Disabled knobs use
-    the same sentinels as the scalar path: ``temperature <= 0`` means greedy
-    for that slot, ``top_k == 0`` means no top-k, ``top_p >= 1`` means no
-    nucleus cut.
+  * static python scalars — ``temperature <= 0`` still short-circuits to
+    argmax at trace time (no sort, no PRNG use).  Any other static
+    combination is broadcast into the vectorized path below, so the two
+    entry modes can never diverge (they used to: the old scalar path fed
+    ``top_k`` straight to ``jax.lax.top_k`` and crashed on ``top_k > V``
+    while the vectorized path clipped it).
+  * array-valued per-slot params — ``temperature``/``top_k``/``top_p`` may
+    be [B] arrays (or traced scalars), one entry per batch slot.  Every
+    slot is masked independently inside one jitted program: the
+    continuous-batching engine runs a pool where each request carries its
+    own sampling config, so the decode scan cannot branch on python
+    values.  Sentinels: ``temperature <= 0`` means greedy for that slot,
+    ``top_k == 0`` means no top-k, ``top_p >= 1`` means no nucleus cut.
+
+``mask_logits`` is exposed on its own because speculative decoding needs
+the *distributions*, not just a draw: the accept/reject test compares the
+target and draft probabilities after the slot's own masking, so both
+models must be filtered by exactly the same rule the sampler uses.
 """
 
 from __future__ import annotations
@@ -26,22 +32,60 @@ def _static_scalars(*vals) -> bool:
     return all(isinstance(v, (int, float)) for v in vals)
 
 
-def _sample_static(key, lf, temperature, top_k, top_p):
-    """Historical scalar path (trace-time branching)."""
-    if temperature <= 0.0:
-        return jnp.argmax(lf, axis=-1).astype(jnp.int32)
-    lf = lf / temperature
-    if top_k:
-        kth = jax.lax.top_k(lf, top_k)[0][..., -1:]
-        lf = jnp.where(lf < kth, -jnp.inf, lf)
-    if top_p < 1.0:
-        sorted_lf = jnp.sort(lf, axis=-1)[..., ::-1]
-        probs = jax.nn.softmax(sorted_lf, axis=-1)
+def mask_logits(logits, *, temperature=0.0, top_k=0, top_p=1.0):
+    """Temperature-scale then top-k/top-p mask logits, per row.
+
+    logits [B, V] -> masked logits [B, V] (float32, ``-inf`` outside the
+    kept set).  Params are scalars or [B] arrays with the module-doc
+    sentinels.  Greedy rows (``temperature <= 0``) are scaled by 1 — their
+    masked values are only meaningful to callers that handle greedy
+    separately (``sample`` picks argmax of the raw logits for them).
+    ``top_k`` is clipped to [1, V] so oversized values mean "disabled",
+    never a crash.
+    """
+    lf = logits.astype(jnp.float32)
+    b, v = lf.shape
+    temp = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (b,))
+    tk = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (b,))
+    tp = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (b,))
+
+    # temperature scale (guard greedy slots against /0)
+    x = lf / jnp.where(temp > 0.0, temp, 1.0)[:, None]
+
+    if _static_scalars(top_k, top_p) and top_k <= 0 and top_p >= 1.0:
+        # trace-time: nothing to mask, no sort in the program at all
+        return x
+
+    def _full(x):
+        # per-slot top-k: kth-highest value per row via a full descending
+        # sort (lax.top_k needs a static k). top_k == 0 disables (k -> V);
+        # any oversized k clips to V (disabled) instead of crashing.
+        k_eff = jnp.clip(jnp.where(tk > 0, tk, v), 1, v)
+        x_desc = jnp.sort(x, axis=-1)[..., ::-1]
+        kth = jnp.take_along_axis(x_desc, (k_eff - 1)[:, None], axis=-1)
+        xm = jnp.where(x < kth, -jnp.inf, x)
+
+        # per-slot top-p on the top-k-masked logits (masked entries carry
+        # zero probability mass). No second sort: the masked entries are
+        # exactly the tail of x_desc, so the sorted masked array is x_desc
+        # with positions >= n_kept set to -inf.
+        n_kept = jnp.sum(x_desc >= kth, axis=-1, keepdims=True)
+        x_desc = jnp.where(jnp.arange(v)[None, :] < n_kept, x_desc, -jnp.inf)
+        probs = jax.nn.softmax(x_desc, axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
-        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
-        cutoff = jnp.take_along_axis(sorted_lf, cutoff_idx, axis=-1)
-        lf = jnp.where(lf < cutoff, -jnp.inf, lf)
-    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+        cutoff_idx = jnp.clip(jnp.sum(cum < tp[:, None], axis=-1), 0, v - 1)
+        cutoff = jnp.take_along_axis(x_desc, cutoff_idx[:, None], axis=-1)
+        return jnp.where((xm < cutoff) & (tp[:, None] < 1.0), -jnp.inf, xm)
+
+    # Runtime fast path: when NO row actually cuts (top_k disabled-or-
+    # oversized and top_p disabled everywhere), the full path above is an
+    # exact no-op — the kth value is the row min and the top_p cutoff is
+    # gated by ``tp < 1`` — so skipping it is bitwise identical. The XLA
+    # CPU sort is the single most expensive op in the decode step for
+    # greedy pools (the speculative path masks K draft + K+1 verify
+    # positions per step), which makes this branch worth a lax.cond.
+    off = jnp.all(((tk <= 0) | (tk >= v)) & (tp >= 1.0))
+    return jax.lax.cond(off, lambda x: x, _full, x)
 
 
 def sample(key, logits, *, temperature=0.0, top_k=0, top_p=1.0):
@@ -51,37 +95,21 @@ def sample(key, logits, *, temperature=0.0, top_k=0, top_p=1.0):
     [B] arrays / traced scalars (vectorized per-slot path, see module doc).
     """
     lf = logits.astype(jnp.float32)
-    if _static_scalars(temperature, top_k, top_p):
-        return _sample_static(key, lf, temperature, top_k, top_p)
-
-    b, v = lf.shape
-    temp = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (b,))
-    tk = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (b,))
-    tp = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (b,))
+    if _static_scalars(temperature, top_k, top_p) and temperature <= 0.0:
+        # trace-time greedy: no sort, no PRNG consumption
+        return jnp.argmax(lf, axis=-1).astype(jnp.int32)
 
     greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
-    # temperature scale (guard the greedy slots against /0; their sampled
-    # value is discarded by the final select)
-    x = lf / jnp.where(temp > 0.0, temp, 1.0)[:, None]
+    temp = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32),
+                            (lf.shape[0],))
 
-    # per-slot top-k: kth-highest value per row via a full descending sort
-    # (lax.top_k needs a static k). top_k == 0 disables (k -> V).
-    k_eff = jnp.clip(jnp.where(tk > 0, tk, v), 1, v)
-    x_desc = jnp.sort(x, axis=-1)[..., ::-1]
-    kth = jnp.take_along_axis(x_desc, (k_eff - 1)[:, None], axis=-1)
-    x = jnp.where(x < kth, -jnp.inf, x)
+    def _stoch(key):
+        x = mask_logits(lf, temperature=temperature, top_k=top_k, top_p=top_p)
+        return jax.random.categorical(key, x, axis=-1).astype(jnp.int32)
 
-    # per-slot top-p on the top-k-masked logits (masked entries carry zero
-    # probability mass, matching the scalar path's apply order). No second
-    # sort: the masked entries are exactly the tail of x_desc, so the sorted
-    # masked array is x_desc with positions >= n_kept set to -inf.
-    n_kept = jnp.sum(x_desc >= kth, axis=-1, keepdims=True)
-    x_desc = jnp.where(jnp.arange(v)[None, :] < n_kept, x_desc, -jnp.inf)
-    probs = jax.nn.softmax(x_desc, axis=-1)
-    cum = jnp.cumsum(probs, axis=-1)
-    cutoff_idx = jnp.clip(jnp.sum(cum < tp[:, None], axis=-1), 0, v - 1)
-    cutoff = jnp.take_along_axis(x_desc, cutoff_idx[:, None], axis=-1)
-    x = jnp.where((x < cutoff) & (tp[:, None] < 1.0), -jnp.inf, x)
-
-    sampled = jax.random.categorical(key, x, axis=-1).astype(jnp.int32)
+    # all-greedy pools skip masking + categorical at runtime; the final
+    # where() picks ``greedy`` for those rows either way, so the fast
+    # branch cannot change any output
+    sampled = jax.lax.cond(jnp.all(temp <= 0.0), lambda _: greedy,
+                           _stoch, key)
     return jnp.where(temp <= 0.0, greedy, sampled)

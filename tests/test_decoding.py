@@ -1,0 +1,419 @@
+"""Decoding-mode zoo tests: beam search + bit-plane self-speculation on the
+scan engine, plane-sliced draft views, and the sampler fast paths.
+
+The load-bearing invariants:
+  * greedy self-speculation is BIT-EXACT with plain greedy decode (the
+    verify forward's position-0 logits are the s=1 forward's logits, and
+    greedy accept/replace reduces to raw-logit argmax agreement);
+  * width-1 beam search IS greedy decode;
+  * a mixed pool (normal + beam + spec slots in one jitted scan) gives
+    every request the same tokens as a homogeneous pool would;
+  * paged beam fan-out shares immutable prefix blocks by reference and
+    never aliases mutable (post-divergence) blocks between hypotheses;
+  * the plane-sliced draft view reuses the packed buffers (zero extra
+    weight HBM) and dequantizes to exactly the top-plane reconstruction.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core import quantize as Q
+from repro.core import reinterpret
+from repro.models import api
+from repro.models.quantized import extra_hbm_bytes, plane_sliced_params
+from repro.serving import decoding
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.sampler import mask_logits, sample
+
+
+def _cfg():
+    cfg = registry.get_reduced("tinyllama-1.1b").replace(
+        activation_dtype=jnp.float32)
+    # packed store pinned: the spec draft is a plane slice of the packed
+    # buffers; float LM head so draft and target share the readout exactly
+    return cfg.with_quant(mpgemm_mode="lut_xla", weight_bits=4,
+                          store="packed", skip="lm_head")
+
+
+@pytest.fixture(scope="module")
+def tl():
+    cfg = _cfg()
+    params = api.init_params(jax.random.key(0), cfg, serve_quantized=True)
+    return cfg, params
+
+
+def _prompts(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, int(rng.integers(4, 12)),
+                         dtype=np.int32) for i in range(n)]
+
+
+def _run(cfg, params, prompts, n_new, *, decoding_str="greedy",
+         engine_kw=None, req_kw=None):
+    kw = dict(max_batch=2, max_seq=64, decode_chunk=4, prefill_chunk=4)
+    kw.update(engine_kw or {})
+    eng = ServingEngine(cfg, params, **kw)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=n_new,
+                    decoding=decoding_str, **(req_kw or {}))
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    return eng, reqs
+
+
+# ---------------------------------------------------------------------------
+# self-speculation: bit-exactness + stats
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("draft_planes", [1, 2, 4])
+def test_spec_greedy_bit_exact_dense(tl, draft_planes):
+    """Greedy spec == plain greedy, token for token, for a real sliced
+    draft (1/2 planes) AND the accept-everything draft (all 4 planes,
+    draft == target)."""
+    cfg, params = tl
+    prompts = _prompts(cfg, 3)
+    _, g_reqs = _run(cfg, params, prompts, 10)
+    _, s_reqs = _run(cfg, params, prompts, 10,
+                     decoding_str=f"spec:draft{draft_planes}b",
+                     engine_kw=dict(spec_k=4,
+                                    spec_draft_planes=draft_planes))
+    for g, s in zip(g_reqs, s_reqs):
+        assert s.done and s.output == g.output
+        assert s.spec_stats is not None
+        assert s.spec_stats["verify_steps"] > 0
+        assert 0 <= s.spec_stats["accepted_draft_tokens"]
+
+
+def test_spec_accept_all_saturates(tl):
+    """draft == target (all planes kept): every draft token is accepted, so
+    each verify round emits K+1 tokens until the budget clips."""
+    cfg, params = tl
+    eng, reqs = _run(cfg, params, _prompts(cfg, 2), 10,
+                     decoding_str="spec:draft4b",
+                     engine_kw=dict(spec_k=4, spec_draft_planes=4))
+    sp = eng.stats()["spec"]
+    # draft == target means every comparison agrees; only the budget clip
+    # on the final round can shave the counted mean below K=4
+    assert sp["mean_accepted_per_step"] >= 3.0
+    assert sp["mean_emitted_per_step"] == pytest.approx(
+        sp["mean_accepted_per_step"] + 1.0)
+    assert sp["draft_extra_hbm_bytes"] == 0
+
+
+def test_spec_greedy_bit_exact_paged(tl):
+    cfg, params = tl
+    prompts = _prompts(cfg, 3, seed=1)
+    paged = dict(cache_block_size=8, num_cache_blocks=17)
+    _, g_reqs = _run(cfg, params, prompts, 8, engine_kw=paged)
+    _, s_reqs = _run(cfg, params, prompts, 8, decoding_str="spec:draft2b",
+                     engine_kw=dict(paged, spec_k=3, spec_draft_planes=2))
+    for g, s in zip(g_reqs, s_reqs):
+        assert s.done and s.output == g.output
+
+
+def test_spec_stochastic_runs_and_counts(tl):
+    """Sampling spec slots run the rejection-sampling path: outputs are
+    legal tokens, stats stay consistent (accepted <= K per verify step)."""
+    cfg, params = tl
+    eng, reqs = _run(cfg, params, _prompts(cfg, 2, seed=3), 12,
+                     decoding_str="spec:draft2b",
+                     engine_kw=dict(spec_k=4, spec_draft_planes=2),
+                     req_kw=dict(temperature=0.9, top_k=40, top_p=0.95))
+    for r in reqs:
+        assert r.done and len(r.output) == 12
+        assert all(0 <= t < cfg.vocab_size for t in r.output)
+        vs, at = (r.spec_stats["verify_steps"],
+                  r.spec_stats["accepted_draft_tokens"])
+        assert vs > 0 and 0 <= at <= 4 * vs
+
+
+# ---------------------------------------------------------------------------
+# beam search
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_beam_width1_equals_greedy(tl, paged):
+    """A width-1 beam maximizes per-step log-prob == greedy argmax."""
+    cfg, params = tl
+    prompts = _prompts(cfg, 2, seed=2)
+    kw = (dict(cache_block_size=8, num_cache_blocks=17) if paged else {})
+    _, g_reqs = _run(cfg, params, prompts, 8, engine_kw=kw)
+    _, b_reqs = _run(cfg, params, prompts, 8, decoding_str="beam:1",
+                     engine_kw=kw)
+    for g, b in zip(g_reqs, b_reqs):
+        assert b.done and b.output == g.output
+        assert b.beams is not None and len(b.beams) == 1
+        assert list(b.beams[0][0]) == g.output
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_beam_search_hypotheses_ranked(tl, paged):
+    cfg, params = tl
+    kw = dict(max_batch=3)
+    if paged:
+        kw.update(cache_block_size=8, num_cache_blocks=25)
+    _, reqs = _run(cfg, params, _prompts(cfg, 1, seed=4), 8,
+                   decoding_str="beam:3", engine_kw=kw)
+    (r,) = reqs
+    assert r.done and r.beams is not None and len(r.beams) == 3
+    scores = [s for _, s in r.beams]
+    assert scores == sorted(scores, reverse=True)  # best first
+    assert r.output == list(r.beams[0][0])
+    assert all(len(t) <= 8 for t, _ in r.beams)
+    # width-3 search explored: hypotheses are not all identical
+    assert len({tuple(t) for t, _ in r.beams}) > 1
+
+
+def test_paged_beam_forks_share_prefix_blocks(tl):
+    """PR-7 follow-on: beam members share the immutable prompt-prefix
+    blocks BY REFERENCE (refcount, no copy) and own private blocks for
+    everything at/after the divergence point — never aliased. Retiring the
+    group returns every block."""
+    cfg, params = tl
+    bs = 4
+    eng = ServingEngine(cfg, params, max_batch=3, max_seq=64,
+                        decode_chunk=4, prefill_chunk=4,
+                        cache_block_size=bs, num_cache_blocks=49)
+    plen = 9  # (plen-1)//bs == 2 shared blocks, block 2 is the divergence
+    prompt = np.arange(plen, dtype=np.int32) % cfg.vocab_size
+    req = Request(uid=0, prompt=prompt, max_new_tokens=6, decoding="beam:3")
+    eng.submit(req)
+    eng._admit()
+    (group,) = eng._beam_groups.values()
+    rows = [eng._slot_blocks[s] for s in group["slots"]]
+    m_share = (plen - 1) // bs
+    lead_row = rows[0]
+    for row in rows[1:]:
+        assert row[:m_share] == lead_row[:m_share]  # shared by reference
+    for bid in lead_row[:m_share]:
+        assert eng._alloc.refs[bid] == len(rows)
+    # post-divergence blocks: pairwise disjoint across members
+    tails = [set(row[m_share:]) for row in rows]
+    for i in range(len(tails)):
+        for j in range(i + 1, len(tails)):
+            assert not (tails[i] & tails[j])
+    eng.run_to_completion()
+    assert req.done and len(req.beams) == 3
+    assert eng._alloc.num_used == 0  # group retirement freed everything
+
+
+# ---------------------------------------------------------------------------
+# mixed pools
+# ---------------------------------------------------------------------------
+
+def test_mixed_mode_pool_parity(tl):
+    """normal + beam:2 + spec slots decode in ONE scan; every request gets
+    exactly the tokens its homogeneous-pool run produces (greedy)."""
+    cfg, params = tl
+    prompts = _prompts(cfg, 3, seed=5)
+    ekw = dict(max_batch=4, spec_k=3, spec_draft_planes=2)
+    eng = ServingEngine(cfg, params, max_seq=64, decode_chunk=4,
+                        prefill_chunk=4, **ekw)
+    reqs = [Request(uid=0, prompt=prompts[0], max_new_tokens=8),
+            Request(uid=1, prompt=prompts[1], max_new_tokens=8,
+                    decoding="beam:2"),
+            Request(uid=2, prompt=prompts[2], max_new_tokens=8,
+                    decoding="spec:draft2b")]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+
+    _, (solo_n,) = _run(cfg, params, [prompts[0]], 8)
+    _, (solo_b,) = _run(cfg, params, [prompts[1]], 8,
+                        decoding_str="beam:2", engine_kw=dict(max_batch=2))
+    _, (solo_s,) = _run(cfg, params, [prompts[2]], 8,
+                        decoding_str="spec:draft2b",
+                        engine_kw=dict(max_batch=1, spec_k=3,
+                                       spec_draft_planes=2))
+    assert reqs[0].output == solo_n.output
+    assert reqs[1].output == solo_b.output
+    assert [t for t, _ in reqs[1].beams] == [t for t, _ in solo_b.beams]
+    assert reqs[2].output == solo_s.output
+
+
+# ---------------------------------------------------------------------------
+# decoding-mode registry
+# ---------------------------------------------------------------------------
+
+def test_decoding_parse():
+    assert decoding.parse("greedy").kind == decoding.NORMAL
+    assert decoding.parse("beam").beam_width == 4
+    assert decoding.parse("beam:2").beam_width == 2
+    assert decoding.parse("spec").draft_planes == 2
+    assert decoding.parse("spec:draft1b").draft_planes == 1
+    assert decoding.parse("spec:3").draft_planes == 3
+    for bad in ("beam:0", "spec:0b", "greedy:x", "wat", "spec:draftb"):
+        with pytest.raises(ValueError):
+            decoding.parse(bad)
+
+
+# ---------------------------------------------------------------------------
+# sampler: regression + static-vs-vectorized parity
+# ---------------------------------------------------------------------------
+
+def test_sampler_static_topk_oversized_regression():
+    """Static-path top_k > vocab must mean 'disabled', not crash (the old
+    scalar path fed it straight to lax.top_k)."""
+    logits = jax.random.normal(jax.random.key(0), (2, 8))
+    big = mask_logits(logits, temperature=1.0, top_k=100)
+    off = mask_logits(logits, temperature=1.0, top_k=0)
+    np.testing.assert_array_equal(np.asarray(big), np.asarray(off))
+    t = sample(jax.random.key(1), logits, temperature=1.0, top_k=100)
+    assert np.asarray(t).shape == (2,) and all(0 <= x < 8 for x in t)
+
+
+@pytest.mark.parametrize("temp,tk,tp", [
+    (1.0, 0, 1.0),      # fully disabled (runtime fast path)
+    (0.7, 3, 1.0),      # top-k only
+    (1.0, 0, 0.7),      # top-p exactly at a cumulative-mass boundary
+    (1.3, 2, 0.6),      # both cuts
+    (1.0, 99, 1.0),     # oversized k == disabled
+])
+def test_sampler_static_vs_vectorized_parity(temp, tk, tp):
+    """Scalar params and [B]-array params must produce IDENTICAL masked
+    logits and samples — including at the top_p boundary where cumulative
+    mass hits the cutoff exactly."""
+    probs = np.array([0.4, 0.3, 0.2, 0.1])  # cum: .4 .7 .9 1.0 (boundary!)
+    logits = jnp.asarray(np.log(probs)[None].repeat(3, 0))
+    b = logits.shape[0]
+    m_static = mask_logits(logits, temperature=temp, top_k=tk, top_p=tp)
+    m_vec = jax.jit(lambda l, t, k, p: mask_logits(
+        l, temperature=t, top_k=k, top_p=p))(
+        logits, jnp.full(b, temp), jnp.full(b, tk, jnp.int32),
+        jnp.full(b, tp))
+    np.testing.assert_array_equal(np.asarray(m_static), np.asarray(m_vec))
+    key = jax.random.key(42)
+    s_static = sample(key, logits, temperature=temp, top_k=tk, top_p=tp)
+    s_vec = jax.jit(lambda kk, l, t, k, p: sample(
+        kk, l, temperature=t, top_k=k, top_p=p))(
+        key, logits, jnp.full(b, temp), jnp.full(b, tk, jnp.int32),
+        jnp.full(b, tp))
+    np.testing.assert_array_equal(np.asarray(s_static), np.asarray(s_vec))
+
+
+def test_mask_logits_runtime_fastpath_exact():
+    """The lax.cond fast path (no row cuts) must be bitwise identical to
+    the full sort path, and mixed rows must still take the full path."""
+    logits = jax.random.normal(jax.random.key(5), (2, 16))
+    # all-disabled [B] params: fast path == plain temperature scale
+    fast = jax.jit(lambda l: mask_logits(
+        l, temperature=jnp.full(2, 2.0), top_k=jnp.zeros(2, jnp.int32),
+        top_p=jnp.ones(2)))(logits)
+    np.testing.assert_array_equal(np.asarray(fast),
+                                  np.asarray(logits / 2.0))
+    # mixed rows: row0 disabled, row1 cut -> full path for the whole batch;
+    # row0's result must STILL equal its solo disabled masking
+    mixed = jax.jit(lambda l: mask_logits(
+        l, temperature=jnp.full(2, 1.0),
+        top_k=jnp.asarray([0, 2], jnp.int32),
+        top_p=jnp.asarray([1.0, 0.6])))(logits)
+    np.testing.assert_array_equal(np.asarray(mixed[0]),
+                                  np.asarray(logits[0]))
+    assert np.isneginf(np.asarray(mixed[1])).sum() >= 14 - 2
+
+
+# ---------------------------------------------------------------------------
+# plane-sliced draft views
+# ---------------------------------------------------------------------------
+
+def test_plane_slice_dequant_is_top_plane_reconstruction():
+    w = jax.random.normal(jax.random.key(2), (8, 16))
+    qw = Q.quantize(w, 4, k_group=4)
+    sign, idx = qw.sign_idx()
+    planes = reinterpret.unfold_group_codes(sign, idx, qw.k_group)
+    sigma = 2.0 * planes.astype(jnp.float32) - 1.0  # [N, K, 4]
+    for keep in (1, 2, 3):
+        view = qw.plane_slice(keep)
+        assert view.plane_scales == qw.plane_scales[4 - keep:]
+        qp = jnp.einsum(
+            "nkb,b->nk", sigma[..., 4 - keep:],
+            jnp.asarray(qw.plane_scales[4 - keep:], jnp.float32))
+        if qw.zero_prime is not None:
+            qp = qp - qw.zero_prime[:, None]
+        want = qw.scale[:, None] * qp
+        np.testing.assert_allclose(np.asarray(Q.dequantize(view)),
+                                   np.asarray(want), rtol=1e-5, atol=1e-6)
+        # truncation error bounded by the dropped plane-scale sum
+        bound = reinterpret.plane_truncation_bound(qw.plane_scales, keep)
+        err = np.abs(np.asarray(Q.dequantize(qw) - Q.dequantize(view)))
+        assert (err <= np.asarray(qw.scale)[:, None] * bound + 1e-5).all()
+
+
+def test_plane_slice_shares_buffers_and_guards():
+    w = jax.random.normal(jax.random.key(3), (8, 16))
+    qw = Q.quantize(w, 4, k_group=4)
+    view = qw.plane_slice(2)
+    assert view.packed is qw.packed and view.scale is qw.scale
+    assert view.is_plane_sliced and not qw.is_plane_sliced
+    assert qw.plane_slice(4) is qw          # keep >= B: the weight itself
+    with pytest.raises(ValueError):
+        qw.plane_slice(0)
+    cw_qw = Q.to_cw_format(qw)
+    # CW store bakes every plane into the codeword matrix: not sliceable
+    if cw_qw.packed is None:
+        with pytest.raises(ValueError):
+            cw_qw.plane_slice(2)
+
+
+def test_plane_sliced_params_zero_extra_hbm(tl):
+    cfg, params = tl
+    draft = plane_sliced_params(params, 2)
+    assert extra_hbm_bytes(draft, params) == 0
+    # and the view is NOT the identity: at least one leaf is sliced
+    from repro.core.quantize import QuantizedWeight
+    leaves = [x for x in jax.tree.leaves(
+        draft, is_leaf=lambda n: isinstance(n, QuantizedWeight))
+        if isinstance(x, QuantizedWeight)]
+    assert leaves and all(x.num_planes == 2 for x in leaves)
+
+
+def test_pallas_kernels_reject_sliced_views():
+    """The Pallas kernels unpack bytes in-kernel with num_planes as the
+    field stride — a sliced view would decode garbage; they must refuse."""
+    from repro.kernels import ops
+    w = jax.random.normal(jax.random.key(4), (16, 32))
+    qw = Q.quantize(w, 4, k_group=4)
+    view = qw.plane_slice(2)
+    x = jnp.ones((2, 32), jnp.float32)
+    for fn in (ops.lut_mpgemm, ops.fused_lut_mpgemm, ops.dequant_mpgemm):
+        with pytest.raises(NotImplementedError):
+            fn(x, view, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# engine stats hygiene
+# ---------------------------------------------------------------------------
+
+def _assert_tree_finite(obj, path="stats"):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            _assert_tree_finite(v, f"{path}.{k}")
+    elif isinstance(obj, (int, float, np.integer, np.floating)) \
+            and not isinstance(obj, bool):
+        assert np.isfinite(obj), f"non-finite {path} = {obj!r}"
+
+
+def test_stats_finite_with_zero_admission_attempts(tl):
+    """A fresh engine (no admissions, no decodes) must report finite stats
+    — the blocked-admissions rate divides by max(1, attempts)."""
+    cfg, params = tl
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                        cache_block_size=8, num_cache_blocks=17)
+    st = eng.stats()
+    assert st["admission_blocked_rate"] == 0.0
+    _assert_tree_finite(st)
+
+
+def test_stats_finite_after_spec_and_beam(tl):
+    cfg, params = tl
+    eng, _ = _run(cfg, params, _prompts(cfg, 2, seed=6), 6,
+                  decoding_str="spec:draft2b",
+                  engine_kw=dict(spec_k=2, spec_draft_planes=2))
+    _assert_tree_finite(eng.stats())
+    eng2, _ = _run(cfg, params, _prompts(cfg, 1, seed=7), 6,
+                   decoding_str="beam:2", engine_kw=dict(max_batch=2))
+    _assert_tree_finite(eng2.stats())
