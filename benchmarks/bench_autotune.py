@@ -157,6 +157,9 @@ def main(argv=None):
         "cache_entries_after": len(cache),
         "cache_hits": hits,
         "cache_misses": misses,
+        # raw TuningCache lookup counters (hits/misses/sanitized/foreign) —
+        # the same dict engine.stats()["tuning_cache"] exposes
+        "cache_counters": cache.counters(),
         "shapes": rows,
     }
     tuned_rows = [r for r in rows if r["cache"] == "miss"]

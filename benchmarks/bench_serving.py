@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.configs import registry
 from repro.models import api
+from repro.obs.metrics import MetricsRegistry
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -88,9 +89,13 @@ def _requests(cfg, n, max_new, seed=0):
 
 
 def run_one(cfg, params, *, decode_chunk, args, **engine_kw):
+    # per-run registry: the engine's latency/occupancy series emit through
+    # repro.obs.metrics and ride the bench JSON as a snapshot, so the bench
+    # exercises the same exposition path serve.py --metrics-out uses
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,
                         max_seq=args.max_seq, decode_chunk=decode_chunk,
-                        prefill_chunk=args.prefill_chunk, **engine_kw)
+                        prefill_chunk=args.prefill_chunk,
+                        metrics=MetricsRegistry(), **engine_kw)
 
     # Attribute XLA compile time for this chunk shape explicitly (AOT
     # lower+compile; never lands on the measured clock). Telling compile
@@ -128,6 +133,9 @@ def run_one(cfg, params, *, decode_chunk, args, **engine_kw):
         })
         if best is None or st["tok_s"] > best["tok_s"]:
             best = st
+    # registry snapshot of the FINAL measured rep (reset() zeroes the
+    # engine_* series per rep): histogram summaries + blockpool counters
+    best["metrics"] = eng.metrics_snapshot()
     return best
 
 

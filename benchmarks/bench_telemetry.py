@@ -1,0 +1,188 @@
+"""Telemetry-overhead benchmark: the observability layer must be ~free.
+
+Runs the SAME serving workload on two warmed engines — telemetry OFF
+(no tracer, no dispatch recorder; the metrics registry always exists, it
+IS the engine's latency storage) and telemetry ON (request-lifecycle
+Tracer + mpGEMM dispatch recording + metrics exposition) — with measured
+reps interleaved off/on/off/on so slow machine drift cancels out of the
+ratio, and reports:
+
+  * ``decode_tok_s`` best-of-``--repeats`` for each, and the ON/OFF ratio.
+    ``--assert-overhead R`` (CI gate: 0.97) exits nonzero if the traced
+    engine loses more than ``1 - R`` of decode throughput;
+  * ``host_syncs_per_token`` for both — asserted EQUAL unconditionally:
+    tracing takes host timestamps only at sync points the engine already
+    has, so it can never add a device round-trip (the one-sync-per-chunk
+    contract from docs/SERVING.md);
+  * the emitted Chrome-trace validated against the format invariants
+    (``repro.obs.trace.validate_chrome_trace``) plus event counts, and the
+    dispatch-decision summary.
+
+    PYTHONPATH=src python benchmarks/bench_telemetry.py --smoke
+    PYTHONPATH=src python benchmarks/bench_telemetry.py \
+        --assert-overhead 0.97 --out BENCH_telemetry.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import api
+from repro.obs import dispatch as dispatch_obs
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer, validate_chrome_trace
+from repro.serving.engine import Request, ServingEngine
+
+
+def _requests(cfg, n, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(4, 24)),
+                                        dtype=np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def make_engine(cfg, params, args, *, tracer=None):
+    """One AOT-compiled, warmed engine (compile + first-touch off the clock)."""
+    eng = ServingEngine(cfg, params, max_batch=args.max_batch,
+                        max_seq=args.max_seq, decode_chunk=args.decode_chunk,
+                        prefill_chunk=args.prefill_chunk,
+                        metrics=MetricsRegistry(), tracer=tracer)
+    eng._decode.lower(eng.params, eng.state).compile()
+    for r in _requests(cfg, args.max_batch, 2, seed=1):
+        eng.submit(r)
+    eng.run_to_completion()
+    return eng
+
+
+def run_rep(eng, cfg, args):
+    """One measured rep of the workload on a warmed engine."""
+    eng.reset()
+    for r in _requests(cfg, args.requests, args.max_new, seed=0):
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run_to_completion()
+    wall = time.perf_counter() - t0
+    st = eng.stats()
+    st["wall_s"] = wall
+    return st
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest footprint: fewer requests/tokens/reps")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=128)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=192)
+    ap.add_argument("--decode-chunk", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--mode", default="lut_xla")
+    ap.add_argument("--weight-bits", type=int, default=2)
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="measured reps per side; best decode_tok_s counts")
+    ap.add_argument("--assert-overhead", type=float, default=None,
+                    metavar="R", help="exit nonzero unless telemetry-on "
+                    "decode tok/s >= R x telemetry-off (CI gate: 0.97)")
+    ap.add_argument("--out", default=None, help="write JSON here")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.requests, args.max_new = 4, 16
+        args.repeats = min(args.repeats, 2)
+
+    cfg = registry.get_reduced(args.arch).replace(
+        activation_dtype=jnp.float32)
+    cfg = cfg.with_quant(mpgemm_mode=args.mode, weight_bits=args.weight_bits)
+    params = api.init_params(jax.random.key(0), cfg, serve_quantized=True)
+
+    # warm both engines up front, then INTERLEAVE measured reps (off, on,
+    # off, on, ...): the 3% gate is tighter than slow machine drift on a
+    # shared box, so pairing reps in time keeps drift out of the ratio.
+    dispatch_obs.disable()
+    eng_off = make_engine(cfg, params, args, tracer=None)
+    tracer = Tracer()
+    recorder = dispatch_obs.enable(dispatch_obs.DispatchRecorder())
+    eng_on = make_engine(cfg, params, args, tracer=tracer)
+
+    off = on = None
+    for _ in range(max(1, args.repeats)):
+        dispatch_obs.disable()
+        st = run_rep(eng_off, cfg, args)
+        if off is None or st["decode_tok_s"] > off["decode_tok_s"]:
+            off = st
+        dispatch_obs.enable(recorder)
+        st = run_rep(eng_on, cfg, args)
+        if on is None or st["decode_tok_s"] > on["decode_tok_s"]:
+            on = st
+    dispatch_obs.disable()
+    print(f"telemetry OFF: {off['decode_tok_s']:8.1f} decode tok/s  "
+          f"syncs/tok {off['host_syncs_per_token']:.4f}")
+    print(f"telemetry ON:  {on['decode_tok_s']:8.1f} decode tok/s  "
+          f"syncs/tok {on['host_syncs_per_token']:.4f}  "
+          f"({len(tracer)} trace events)")
+
+    # the sync contract is not a threshold: tracing reuses the timestamps
+    # the chunk sync already earns, so the counts must match exactly
+    if on["host_syncs_per_token"] != off["host_syncs_per_token"]:
+        raise AssertionError(
+            f"telemetry changed host_syncs_per_token: "
+            f"{off['host_syncs_per_token']} -> {on['host_syncs_per_token']}")
+
+    trace = tracer.chrome_trace()["traceEvents"]
+    trace_summary = validate_chrome_trace(trace)
+    names = {e["name"] for e in trace}
+    for want in ("admit", "decode_chunk", "request"):
+        if want not in names:
+            raise AssertionError(f"trace is missing {want!r} spans: {names}")
+    print(f"trace valid: {trace_summary}")
+
+    ratio = on["decode_tok_s"] / off["decode_tok_s"]
+    result = {
+        "bench": "telemetry",
+        "arch": args.arch,
+        "mode": args.mode,
+        "weight_bits": args.weight_bits,
+        "requests": args.requests,
+        "max_new": args.max_new,
+        "max_batch": args.max_batch,
+        "decode_chunk": args.decode_chunk,
+        "repeats": args.repeats,
+        "off": {k: off[k] for k in ("decode_tok_s", "decode_tokens",
+                                    "host_syncs_per_token", "p50_chunk_ms",
+                                    "p95_chunk_ms", "wall_s")},
+        "on": {k: on[k] for k in ("decode_tok_s", "decode_tokens",
+                                  "host_syncs_per_token", "p50_chunk_ms",
+                                  "p95_chunk_ms", "wall_s")},
+        "decode_tok_s_ratio": ratio,
+        "host_syncs_per_token_equal": True,
+        "trace": trace_summary,
+        "dispatch": {k: v for k, v in recorder.summary().items()
+                     if k != "records"},
+        "metrics_series": len(eng_on.metrics_snapshot()["metrics"]),
+    }
+    print(f"telemetry-on/off decode tok/s ratio: {ratio:.3f}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {args.out}")
+    if args.assert_overhead is not None and ratio < args.assert_overhead:
+        print(f"ASSERTION FAILED: telemetry-on decode tok/s ratio "
+              f"{ratio:.3f} < {args.assert_overhead}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

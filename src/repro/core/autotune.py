@@ -144,6 +144,7 @@ class TuningCache:
         self.foreign = False      # loaded from a different backend/jax
         self.hits = 0
         self.misses = 0
+        self.sanitized = 0        # lookups whose entry needed repair/drop
         if path is not None and os.path.exists(path):
             self._load(path)
 
@@ -220,6 +221,24 @@ class TuningCache:
             self.hits += 1
         return cfg
 
+    def counters(self) -> dict:
+        """Observability snapshot: lookup traffic + durability state.
+
+        ``sanitized`` counts lookups whose entry had to be repaired (blocks
+        re-clamped, fused demoted to staged) or dropped entirely — nonzero
+        on a healthy same-backend cache means the cache file is stale or
+        foreign. Exposed via ``engine.stats()['tuning_cache']`` and
+        ``bench_autotune.py``."""
+        return {
+            "entries": len(self.entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "sanitized": self.sanitized,
+            "foreign": self.foreign,
+            "backend": self.backend,
+            "path": self.path,
+        }
+
     def __len__(self):
         return len(self.entries)
 
@@ -260,7 +279,10 @@ def lookup_tuned(m: int, n: int, g: int, k_group: int, planes: int, *,
     cfg = _ACTIVE.lookup(key)
     if cfg is None:
         return None
-    return sanitize_config(cfg, m, n, g, k_group, planes)
+    out = sanitize_config(cfg, m, n, g, k_group, planes)
+    if out != cfg:  # repaired (clamped/demoted) or dropped (None)
+        _ACTIVE.sanitized += 1
+    return out
 
 
 def lookup_fusion_any(m: int, g: int, k_group: int, w_bits: int) -> Optional[str]:

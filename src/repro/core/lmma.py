@@ -138,9 +138,14 @@ def select_fusion(desc: LMMADescriptor,
     """
     if ts is None:
         ts = schedule_tiles(desc)
-    return ("fused"
-            if fused_tile_bytes(ts.bm, ts.bn, ts.bg, desc) <= vmem_budget
-            else "staged")
+    fusion = ("fused"
+              if fused_tile_bytes(ts.bm, ts.bn, ts.bg, desc) <= vmem_budget
+              else "staged")
+    # trace-time dispatch profiling hook (no-op unless a recorder is active)
+    from repro.obs import dispatch as dispatch_obs
+    dispatch_obs.record("select_fusion", desc.name(), fusion, "auto",
+                        "heuristic", (ts.bm, ts.bn, ts.bg))
+    return fusion
 
 
 def _score(ts: TileSchedule, desc: LMMADescriptor, elongate: bool) -> float:

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import autotune
 from repro.core import table as table_mod
+from repro.obs import dispatch as dispatch_obs
 from repro.core.lmma import (LMMADescriptor, TileSchedule, schedule_tiles,
                              select_fusion)
 from repro.core.quantize import QuantizedWeight
@@ -142,10 +143,13 @@ def resolve_dispatch(m, n, g, k_group, planes, *, fusion="auto",
       * ``"fused"``/``"staged"`` — forced, blocks clamped as usual.
     """
     m, n = plan_local_shape(m, n)
+    requested = fusion
+    source = "forced"
     if fusion == "tuned":
         tc = autotune.lookup_tuned(m, n, g, k_group, planes,
                                    table_quant=table_quant)
         if tc is not None:
+            source = "tuned"
             fusion = tc.fusion
             block_m = block_m or tc.block_m
             block_n = block_n or tc.block_n
@@ -155,7 +159,16 @@ def resolve_dispatch(m, n, g, k_group, planes, *, fusion="auto",
     bm, bn, bg = _clamp_blocks(m, n, g, k_group, planes,
                                block_m, block_n, block_g)
     if fusion == "auto":
+        source = "heuristic"
         fusion = auto_fusion(m, n, g, k_group, planes, bm, bn, bg)
+    # trace-time dispatch profiling (obs.dispatch): a no-op unless a
+    # recorder is active — a serve run can dump exactly which kernel
+    # configs its compiled programs contain
+    dispatch_obs.record(
+        "dispatch",
+        autotune.shape_key(m, n, g, k_group, planes,
+                           table_quant=table_quant),
+        fusion, requested, source, (bm, bn, bg))
     return fusion, bm, bn, bg
 
 

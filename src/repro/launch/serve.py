@@ -85,6 +85,17 @@ def main(argv=None):
                          "Default is single-device — the 1x1 no-op plan")
     ap.add_argument("--tp", type=int, default=None, metavar="N",
                     help="tensor-parallel shortcut for --mesh 1xN")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the request "
+                         "lifecycle (admit/prefill/decode-chunk spans; open "
+                         "at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot as JSON "
+                         "('-.prom' suffix writes Prometheus text instead)")
+    ap.add_argument("--dispatch-log", default=None, metavar="PATH",
+                    help="record every mpGEMM dispatch decision (shape key, "
+                         "fusion, tuned-vs-heuristic) traced during this "
+                         "serve and write it as JSON")
     args = ap.parse_args(argv)
 
     cfg = (registry.get_reduced(args.arch) if args.reduced
@@ -129,6 +140,14 @@ def main(argv=None):
         plan = make_plan(mesh, fsdp=False)
         print(f"serving mesh {d}x{m} (data x model) over "
               f"{jax.device_count()} devices")
+    tracer = None
+    if args.trace_out is not None:
+        from repro.obs.trace import Tracer
+        tracer = Tracer()
+    recorder = None
+    if args.dispatch_log is not None:
+        from repro.obs import dispatch as dispatch_obs
+        recorder = dispatch_obs.enable(dispatch_obs.DispatchRecorder())
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,
                         max_seq=args.max_seq,
                         decode_chunk=args.decode_chunk,
@@ -140,7 +159,8 @@ def main(argv=None):
                         prefix_cache=args.prefix_cache,
                         plan=plan,
                         spec_k=args.spec_k,
-                        spec_draft_planes=spec_draft_planes)
+                        spec_draft_planes=spec_draft_planes,
+                        tracer=tracer)
     if args.pretune:
         if eng.tuning_cache is None:  # tune in-memory for this process
             from repro.core import autotune
@@ -185,6 +205,27 @@ def main(argv=None):
             line += (f", prefix hits {pc['hits']} (reused "
                      f"{st['prefill_tokens_reused']} prompt tokens)")
         print(line)
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        print(f"trace: {len(tracer)} events -> {args.trace_out} "
+              "(open at ui.perfetto.dev)")
+    if args.metrics_out is not None:
+        if args.metrics_out.endswith(".prom"):
+            with open(args.metrics_out, "w") as f:
+                f.write(eng.prometheus_text())
+        else:
+            import json
+            with open(args.metrics_out, "w") as f:
+                json.dump(eng.metrics_snapshot(), f, indent=2)
+        print(f"metrics -> {args.metrics_out}")
+    if recorder is not None:
+        import json
+        with open(args.dispatch_log, "w") as f:
+            json.dump(recorder.summary(), f, indent=2)
+        s = recorder.summary()
+        print(f"dispatch log: {s['decisions']} mpGEMM decisions "
+              f"({s['tuned']} tuned, {s['heuristic']} heuristic, "
+              f"{s['forced']} forced) -> {args.dispatch_log}")
     return 0
 
 

@@ -1,0 +1,336 @@
+"""Typed metrics registry: counters, gauges, bounded-reservoir histograms.
+
+Design constraints (serving hot path):
+
+  * **Bounded memory.** A long-lived engine observes millions of chunk
+    latencies; the histogram keeps an exact ``count``/``sum``/``min``/``max``
+    plus a fixed-size reservoir (Vitter's algorithm R) for percentiles, so
+    memory is O(reservoir) however long the engine lives — replacing the
+    unbounded ``chunk_latencies`` list the engine used to grow forever.
+  * **Thread-safe.** The admit loop, stats scrapes, and a future HTTP
+    front-end touch the same registry; every instrument takes a per-
+    instrument lock (ns-scale, uncontended) and the registry locks only
+    get-or-create.
+  * **Interpolated percentiles.** ``percentile(p)`` linearly interpolates
+    between closest ranks — nearest-rank on a 3-sample list reported p50 as
+    the *second-largest* sample, which is what ``engine.stats()`` shipped
+    before this module.
+
+Exposition: ``registry.snapshot()`` is a JSON-able dict;
+``registry.prometheus_text()`` is the Prometheus text format (counters get
+the ``_total`` convention applied by the caller's naming; histograms export
+count/sum plus quantile gauges).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import random
+import threading
+from typing import Dict, List, Optional, Union
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "export_stats"]
+
+_NAME_OK = frozenset(
+    "abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_:")
+
+
+def _check_name(name: str) -> str:
+    if not name or name[0].isdigit() or not set(name) <= _NAME_OK:
+        raise ValueError(f"invalid metric name {name!r} (want Prometheus "
+                         "[a-zA-Z_:][a-zA-Z0-9_:]*)")
+    return name
+
+
+class _Instrument:
+    kind = "?"
+
+    def __init__(self, name: str, help: str = "", unit: str = ""):
+        self.name = _check_name(name)
+        self.help = help
+        self.unit = unit
+        self._lock = threading.Lock()
+
+
+class Counter(_Instrument):
+    """Monotonically increasing count. ``inc()`` with a negative delta
+    raises — a decreasing counter is a bug, use a Gauge."""
+
+    kind = "counter"
+
+    def __init__(self, name, help="", unit=""):
+        super().__init__(name, help, unit)
+        self._value = 0
+
+    def inc(self, n: Union[int, float] = 1):
+        if n < 0:
+            raise ValueError(f"counter {self.name}: negative increment {n}")
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self):
+        with self._lock:
+            return self._value
+
+    def reset(self):
+        with self._lock:
+            self._value = 0
+
+    def snapshot(self) -> dict:
+        return {"type": self.kind, "value": self.value}
+
+
+class Gauge(_Instrument):
+    """Last-written value (set/add; may go down)."""
+
+    kind = "gauge"
+
+    def __init__(self, name, help="", unit=""):
+        super().__init__(name, help, unit)
+        self._value = 0.0
+
+    def set(self, v: float):
+        with self._lock:
+            self._value = v
+
+    def add(self, v: float):
+        with self._lock:
+            self._value += v
+
+    @property
+    def value(self):
+        with self._lock:
+            return self._value
+
+    def reset(self):
+        self.set(0.0)
+
+    def snapshot(self) -> dict:
+        return {"type": self.kind, "value": self.value}
+
+
+class Histogram(_Instrument):
+    """Exact count/sum/min/max + fixed-size reservoir for percentiles.
+
+    Reservoir sampling (algorithm R) keeps a uniform sample of everything
+    ever observed, so percentiles stay representative of the whole run, not
+    just the newest window, while memory stays O(reservoir_size). The RNG is
+    seeded per-instrument for reproducible snapshots in tests.
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name, help="", unit="", reservoir_size: int = 1024,
+                 seed: int = 0):
+        super().__init__(name, help, unit)
+        if reservoir_size < 1:
+            raise ValueError(f"histogram {name}: reservoir_size must be >= 1")
+        self.reservoir_size = reservoir_size
+        self._rng = random.Random(seed ^ hash(name) & 0xFFFFFFFF)
+        self._res: List[float] = []
+        self._count = 0
+        self._sum = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+
+    def observe(self, v: float):
+        v = float(v)
+        with self._lock:
+            self._count += 1
+            self._sum += v
+            self._min = min(self._min, v)
+            self._max = max(self._max, v)
+            if len(self._res) < self.reservoir_size:
+                self._res.append(v)
+            else:
+                j = self._rng.randrange(self._count)
+                if j < self.reservoir_size:
+                    self._res[j] = v
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    @property
+    def total(self) -> float:
+        """Exact sum of every observation (not reservoir-sampled)."""
+        with self._lock:
+            return self._sum
+
+    @property
+    def mean(self) -> float:
+        with self._lock:
+            return self._sum / self._count if self._count else 0.0
+
+    def percentile(self, p: float) -> float:
+        """Linearly-interpolated percentile over the reservoir, ``p`` in
+        [0, 1]. Small samples interpolate between closest ranks (numpy
+        'linear' convention) instead of snapping to a single sample."""
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(f"percentile wants p in [0,1], got {p}")
+        with self._lock:
+            xs = sorted(self._res)
+        if not xs:
+            return 0.0
+        rank = p * (len(xs) - 1)
+        lo = int(math.floor(rank))
+        hi = min(lo + 1, len(xs) - 1)
+        frac = rank - lo
+        return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+    def reset(self):
+        with self._lock:
+            self._res = []
+            self._count = 0
+            self._sum = 0.0
+            self._min = math.inf
+            self._max = -math.inf
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            count, total = self._count, self._sum
+            mn = self._min if self._count else 0.0
+            mx = self._max if self._count else 0.0
+        return {
+            "type": self.kind, "count": count, "sum": total,
+            "min": mn, "max": mx,
+            "mean": total / count if count else 0.0,
+            "p50": self.percentile(0.50),
+            "p95": self.percentile(0.95),
+            "p99": self.percentile(0.99),
+        }
+
+
+class MetricsRegistry:
+    """Get-or-create instrument store with JSON + Prometheus exposition.
+
+    ``common_labels`` (e.g. ``host="3"`` on a mesh'd run) are attached to
+    every exposed series, so multi-host snapshots merge without collisions.
+    Re-registering a name with a different instrument kind raises — a
+    counter silently shadowing a histogram is how metrics go quietly wrong.
+    """
+
+    def __init__(self, common_labels: Optional[Dict[str, str]] = None):
+        self._lock = threading.Lock()
+        self._instruments: Dict[str, _Instrument] = {}
+        self.common_labels: Dict[str, str] = dict(common_labels or {})
+
+    def set_common_labels(self, **labels: str):
+        self.common_labels.update({k: str(v) for k, v in labels.items()})
+
+    def _get_or_create(self, cls, name, help, unit, **kw):
+        with self._lock:
+            inst = self._instruments.get(name)
+            if inst is None:
+                inst = cls(name, help=help, unit=unit, **kw)
+                self._instruments[name] = inst
+            elif not isinstance(inst, cls):
+                raise ValueError(
+                    f"metric {name!r} already registered as {inst.kind}, "
+                    f"requested {cls.kind}")
+            return inst
+
+    def counter(self, name, help="", unit="") -> Counter:
+        return self._get_or_create(Counter, name, help, unit)
+
+    def gauge(self, name, help="", unit="") -> Gauge:
+        return self._get_or_create(Gauge, name, help, unit)
+
+    def histogram(self, name, help="", unit="",
+                  reservoir_size: int = 1024) -> Histogram:
+        return self._get_or_create(Histogram, name, help, unit,
+                                   reservoir_size=reservoir_size)
+
+    def get(self, name) -> Optional[_Instrument]:
+        with self._lock:
+            return self._instruments.get(name)
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._instruments)
+
+    def reset(self, prefix: str = ""):
+        """Reset every instrument whose name starts with ``prefix`` (all by
+        default). Instruments stay registered — engine.reset() zeroes its
+        series without orphaning scrapers holding instrument handles."""
+        with self._lock:
+            insts = [i for n, i in self._instruments.items()
+                     if n.startswith(prefix)]
+        for i in insts:
+            i.reset()
+
+    # -- exposition -------------------------------------------------------
+    def snapshot(self) -> dict:
+        """JSON-able {labels, metrics: {name: {...}}} snapshot."""
+        with self._lock:
+            insts = dict(self._instruments)
+        return {
+            "labels": dict(self.common_labels),
+            "metrics": {n: i.snapshot() for n, i in sorted(insts.items())},
+        }
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.snapshot(), indent=indent)
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition (one HELP/TYPE block per series)."""
+        labels = ",".join(f'{k}="{v}"'
+                          for k, v in sorted(self.common_labels.items()))
+        lb = f"{{{labels}}}" if labels else ""
+
+        def qlb(extra):
+            items = sorted(self.common_labels.items()) + sorted(extra.items())
+            body = ",".join(f'{k}="{v}"' for k, v in items)
+            return f"{{{body}}}" if body else ""
+
+        with self._lock:
+            insts = sorted(self._instruments.items())
+        out = []
+        for name, inst in insts:
+            if inst.help:
+                out.append(f"# HELP {name} {inst.help}")
+            if isinstance(inst, Histogram):
+                out.append(f"# TYPE {name} summary")
+                snap = inst.snapshot()
+                for q, key in (("0.5", "p50"), ("0.95", "p95"),
+                               ("0.99", "p99")):
+                    out.append(f"{name}{qlb({'quantile': q})} {snap[key]}")
+                out.append(f"{name}_sum{lb} {snap['sum']}")
+                out.append(f"{name}_count{lb} {snap['count']}")
+            else:
+                out.append(f"# TYPE {name} {inst.kind}")
+                out.append(f"{name}{lb} {inst.value}")
+        return "\n".join(out) + "\n"
+
+
+def export_stats(registry: MetricsRegistry, stats: dict,
+                 prefix: str = "engine") -> int:
+    """Mirror a nested numeric stats dict into registry gauges.
+
+    ``engine.stats()`` keeps its dict schema (the benches and tests consume
+    it directly); this helper flattens it into ``<prefix>_<path>`` gauges so
+    the same numbers ride the Prometheus/JSON exposition. Non-numeric and
+    None values are skipped. Returns the number of gauges written."""
+    n = 0
+
+    def walk(prefix, node):
+        nonlocal n
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(f"{prefix}_{k}", v)
+            return
+        if isinstance(node, bool) or node is None or isinstance(node, str):
+            return
+        if isinstance(node, (int, float)):
+            registry.gauge(_sanitize(prefix)).set(float(node))
+            n += 1
+
+    def _sanitize(name):
+        return "".join(c if c in _NAME_OK else "_" for c in name)
+
+    walk(prefix, stats)
+    return n

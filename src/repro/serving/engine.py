@@ -62,6 +62,9 @@ from repro.configs.registry import ArchConfig
 from repro.distributed import sharding as shrules
 from repro.distributed.sharding import AxisPlan, plan_scope
 from repro.models import api, kvcache
+from repro.obs import dispatch as dispatch_obs
+from repro.obs.metrics import MetricsRegistry, export_stats
+from repro.obs.trace import Tracer
 from repro.serving import blockpool, decoding
 from repro.serving.sampler import mask_logits, sample
 
@@ -131,8 +134,36 @@ class ServingEngine:
                  plan: Optional[AxisPlan] = None,
                  spec_k: int = 4,
                  spec_draft_planes: Optional[int] = None,
-                 beam_length_alpha: float = 0.6):
+                 beam_length_alpha: float = 0.6,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
+        # ---- telemetry (repro.obs) ---------------------------------------
+        # The tracer records request-lifecycle spans with host timestamps
+        # taken ONLY at sync/dispatch points that already exist — telemetry
+        # adds zero device round-trips (host_syncs_per_token is invariant;
+        # benchmarks/bench_telemetry.py gates the tok/s overhead). A None
+        # tracer costs one `is not None` check per site. The metrics
+        # registry always exists: its bounded-reservoir histograms ARE the
+        # engine's latency/occupancy storage (O(reservoir) however long the
+        # engine lives, unlike the unbounded lists they replaced).
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        if plan is not None:
+            # per-host series labels so mesh'd snapshots merge cleanly
+            self.metrics.set_common_labels(
+                host=str(jax.process_index()),
+                mesh="x".join(str(s) for s in plan.mesh.devices.shape))
+        self._h_chunk_s = self.metrics.histogram(
+            "engine_decode_chunk_seconds",
+            help="wall seconds per decode-chunk dispatch (sync to sync)",
+            unit="s")
+        self._h_occupancy = self.metrics.histogram(
+            "engine_slot_occupancy_ratio",
+            help="occupied slots / max_batch, sampled once per chunk")
+        self._h_prefill_s = self.metrics.histogram(
+            "engine_prefill_chunk_seconds",
+            help="wall seconds per prefill-chunk dispatch", unit="s")
         # Tensor/data-parallel serving: ``plan`` shards the packed weights
         # (named_sharding_tree), the engine state and the cache pool across
         # the plan's mesh, and every jitted program traces inside
@@ -315,8 +346,10 @@ class ServingEngine:
         self.queue = deque()
         self.slots = [None] * b
         if self.paged:
-            self._alloc = blockpool.BlockAllocator(self.num_cache_blocks)
-            self._prefix = (blockpool.PrefixCache(self._alloc)
+            self._alloc = blockpool.BlockAllocator(self.num_cache_blocks,
+                                                   metrics=self.metrics)
+            self._prefix = (blockpool.PrefixCache(self._alloc,
+                                                  metrics=self.metrics)
                             if self.prefix_caching else None)
             self._pending_keys: set = set()  # divergence entries whose last
             # position is unwritten until the origin's first decode chunk
@@ -349,14 +382,18 @@ class ServingEngine:
         self.decode_syncs = 0       # host round-trips in the decode loop
         self.decode_tokens = 0      # tokens emitted by decode chunks
         self.prefill_dispatches = 0
-        self.chunk_latencies: List[float] = []  # seconds per decode chunk
+        # per-chunk latency/occupancy history lives in bounded-reservoir
+        # histograms (engine_decode_chunk_seconds etc.), not python lists:
+        # memory stays O(reservoir) however long the engine serves
+        self._h_chunk_s.reset()
+        self._h_occupancy.reset()
+        self._h_prefill_s.reset()
         self.prefill_s = 0.0        # wall seconds spent in prefill dispatch
         self.prefill_tokens = 0     # prompt tokens actually prefilled
         self.prefill_tokens_reused = 0  # prompt tokens served from shared
         # blocks (prefix cache hits) instead of being re-prefilled
         self.admit_attempts = 0
         self.admit_blocked = 0      # admissions deferred for lack of blocks
-        self.occupancy_samples: List[float] = []  # slot occupancy per chunk
         self.peak_active_slots = 0
         # decoding-mode bookkeeping (host mirrors of per-slot device state)
         self._slot_kind: List[int] = [decoding.NORMAL] * b
@@ -827,9 +864,10 @@ class ServingEngine:
 
         # chunked prefill of prompt[:-1] into a zeroed batch-1 slot view;
         # the last token is fed to the first decode step instead
-        t0 = time.perf_counter()
         c = self.prefill_chunk
         slot_caches = self._zero_slot
+        t0 = time.perf_counter_ns()
+        tc = t0
         for j in range(0, plen - 1, c):
             vl = min(c, plen - 1 - j)
             buf = np.zeros((1, c), np.int32)
@@ -837,9 +875,20 @@ class ServingEngine:
             slot_caches = self._prefill(
                 self.params, slot_caches, jnp.asarray(buf),
                 np.int32(j), np.int32(vl))
+            tn = time.perf_counter_ns()
+            self._h_prefill_s.observe((tn - tc) / 1e9)
+            if self.tracer is not None:
+                self.tracer.complete("prefill_chunk", tc, tn, cat="prefill",
+                                     uid=req.uid, slot=i, offset=j, valid=vl)
+            tc = tn
             self.prefill_dispatches += 1
             self.prefill_tokens += vl
-        self.prefill_s += time.perf_counter() - t0
+        t1 = time.perf_counter_ns()
+        self.prefill_s += (t1 - t0) / 1e9
+        if self.tracer is not None:
+            self.tracer.complete("admit", t0, t1, uid=req.uid, slot=i,
+                                 prompt_len=plen, mode=req.decoding,
+                                 paged=False)
 
         self._set_slot(i, req, prompt,
                        self._merge(self.state.caches, slot_caches,
@@ -918,10 +967,16 @@ class ServingEngine:
         else:
             start = m0 * bs
         self.prefill_tokens_reused += min(start, plen - 1)
+        if self.tracer is not None and (m0 > 0 or cow_src is not None):
+            self.tracer.instant("prefix_hit", cat="prefill", uid=req.uid,
+                                slot=i, shared_blocks=m0,
+                                cow=cow_src is not None,
+                                tokens_reused=min(start, plen - 1))
 
         # prefill the unshared suffix straight into the pool (prefix hits
         # skip whole chunks; a full COW hit skips prefill entirely)
-        t0 = time.perf_counter()
+        t0 = time.perf_counter_ns()
+        tc = t0
         if start >= plen - 1 and self._all_pooled:
             # everything came from shared blocks and there is no slot-
             # resident state to reset: the fan-out fast path is pure
@@ -944,6 +999,13 @@ class ServingEngine:
                 view = self._prefill_paged(self.params, view,
                                            jnp.asarray(buf), np.int32(j),
                                            np.int32(vl), page_row)
+                tn = time.perf_counter_ns()
+                self._h_prefill_s.observe((tn - tc) / 1e9)
+                if self.tracer is not None:
+                    self.tracer.complete("prefill_chunk", tc, tn,
+                                         cat="prefill", uid=req.uid, slot=i,
+                                         offset=j, valid=vl)
+                tc = tn
                 self.prefill_dispatches += 1
                 self.prefill_tokens += vl
             # merge eagerly in python: pooled leaves pass through BY
@@ -954,7 +1016,13 @@ class ServingEngine:
                 jax.lax.dynamic_update_slice_in_dim(
                     cc, v.astype(cc.dtype), i, axis=bax),
                 caches, view, self._axes, self._pooled)
-        self.prefill_s += time.perf_counter() - t0
+        t1 = time.perf_counter_ns()
+        self.prefill_s += (t1 - t0) / 1e9
+        if self.tracer is not None:
+            self.tracer.complete("admit", t0, t1, uid=req.uid, slot=i,
+                                 prompt_len=plen, mode=req.decoding,
+                                 paged=True, shared_blocks=m0,
+                                 cow=cow_src is not None)
 
         live = self._set_slot(i, req, prompt, new_caches, page_table=new_pt)
 
@@ -1065,6 +1133,11 @@ class ServingEngine:
             else:
                 self._admit_one(free[0], req)
             self.queue.popleft()
+            if self.tracer is not None:
+                self.tracer.async_begin("request", id=req.uid,
+                                        mode=req.decoding, width=width)
+                if req.done:  # max_new_tokens <= 0: retires at admission
+                    self.tracer.async_end("request", id=req.uid, tokens=0)
             n += 1
         return n
 
@@ -1089,14 +1162,14 @@ class ServingEngine:
                     f"than the pool can ever free (num_cache_blocks="
                     f"{self.num_cache_blocks}, block={self.cache_block_size})")
             return admitted > 0
-        self.occupancy_samples.append(occ / self.max_batch)
+        self._h_occupancy.observe(occ / self.max_batch)
         # decode-variant dispatch on the pool's current mode mix: a pure
         # NORMAL pool runs the legacy two-arg program unchanged (same AOT
         # artifact bench_serving compiles); beam/spec pools run the general
         # program with the matching static flags
         has_beam = any(self._slot_kind[i] == decoding.BEAM for i in occupied)
         has_spec = any(self._slot_kind[i] == decoding.SPEC for i in occupied)
-        t0 = time.perf_counter()
+        t0 = time.perf_counter_ns()
         if not (has_beam or has_spec):
             self.state, toks, valid = self._decode(self.params, self.state)
             toks, valid, alive = jax.device_get(
@@ -1111,8 +1184,14 @@ class ServingEngine:
                 (toks, valid, parent, self.state.active,
                  self.state.beam_score, self.state.spec_steps,
                  self.state.spec_accepted))  # still ONE sync per chunk
+        t1 = time.perf_counter_ns()  # the timestamp the sync already earned
         self.decode_syncs += 1
-        self.chunk_latencies.append(time.perf_counter() - t0)
+        self._h_chunk_s.observe((t1 - t0) / 1e9)
+        if self.tracer is not None:
+            self.tracer.complete(
+                "decode_chunk", t0, t1, cat="decode", steps=self.decode_chunk,
+                active_slots=occ, occupancy=occ / self.max_batch,
+                has_beam=has_beam, has_spec=has_spec)
         if self.paged and self._pending_keys:
             # every pending divergence entry's origin slot just ran its
             # first decode chunk, writing the entry's last position: promote
@@ -1160,6 +1239,9 @@ class ServingEngine:
                 self.spec_verify_steps += vs
                 self.spec_accepted_tokens += at
             req.done = True
+            if self.tracer is not None:
+                self.tracer.async_end("request", id=req.uid,
+                                      tokens=len(req.output or []))
             self.slots[i] = None  # retire -> refillable next boundary
             retired.append(i)
         # beam groups with no live hypothesis left: rank and retire together
@@ -1176,6 +1258,10 @@ class ServingEngine:
             req.beams = [(list(hyps[k][0]), float(norm[k])) for k in order]
             req.output = list(req.beams[0][0]) if req.beams else []
             req.done = True
+            if self.tracer is not None:
+                self.tracer.async_end("request", id=req.uid,
+                                      tokens=len(req.output),
+                                      hypotheses=len(req.beams))
             for m in g["slots"]:
                 self.slots[m] = None
                 self._slot_kind[m] = decoding.NORMAL
@@ -1240,12 +1326,12 @@ class ServingEngine:
 
     # -- observability ------------------------------------------------------
     def stats(self) -> dict:
-        lat = sorted(self.chunk_latencies)
-        pct = (lambda p: lat[min(len(lat) - 1, int(p * len(lat)))]
-               if lat else 0.0)
+        # latency/occupancy come from the bounded-reservoir histograms;
+        # percentiles interpolate between closest ranks (the old nearest-
+        # rank lambda reported p50 of 3 samples as the second LARGEST)
+        h = self._h_chunk_s
         toks = max(1, self.decode_tokens)
-        decode_s = sum(self.chunk_latencies)
-        occ = self.occupancy_samples
+        decode_s = h.total
         out = {
             "decode_chunk": self.decode_chunk,
             "prefill_chunk": self.prefill_chunk,
@@ -1253,8 +1339,8 @@ class ServingEngine:
             "decode_tokens": self.decode_tokens,
             "host_syncs_per_token": self.decode_syncs / toks,
             "prefill_dispatches": self.prefill_dispatches,
-            "p50_chunk_ms": pct(0.50) * 1e3,
-            "p95_chunk_ms": pct(0.95) * 1e3,
+            "p50_chunk_ms": h.percentile(0.50) * 1e3,
+            "p95_chunk_ms": h.percentile(0.95) * 1e3,
             # decode-only throughput: excludes prefill/admit/compile, so it
             # is the number that isolates a decode-chunk latency cliff
             "decode_tok_s": self.decode_tokens / decode_s if decode_s else 0.0,
@@ -1265,7 +1351,7 @@ class ServingEngine:
                 self.plan.mesh.axis_names, self.plan.mesh.devices.shape))),
             "cache_hbm_bytes": int(sum(
                 l.nbytes for l in jax.tree.leaves(self.state.caches))),
-            "slot_occupancy": (sum(occ) / len(occ)) if occ else 0.0,
+            "slot_occupancy": self._h_occupancy.mean,
             "peak_active_slots": self.peak_active_slots,
             "admit_attempts": self.admit_attempts,
             "admit_blocked": self.admit_blocked,
@@ -1317,4 +1403,22 @@ class ServingEngine:
                 "active_groups": len(self._beam_groups),
                 "length_alpha": self.beam_length_alpha,
             }
+        if self.tuning_cache is not None:
+            out["tuning_cache"] = self.tuning_cache.counters()
+        rec = dispatch_obs.get_active()
+        if rec is not None:
+            s = rec.summary()
+            out["dispatch"] = {k: s[k] for k in
+                               ("decisions", "tuned", "heuristic", "forced")}
         return out
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-able registry snapshot with ``stats()`` mirrored in as
+        ``engine_*`` gauges (counters/gauges/histogram summaries)."""
+        export_stats(self.metrics, self.stats(), prefix="engine")
+        return self.metrics.snapshot()
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition of the same snapshot."""
+        export_stats(self.metrics, self.stats(), prefix="engine")
+        return self.metrics.prometheus_text()

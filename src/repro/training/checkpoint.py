@@ -38,6 +38,7 @@ def _flatten_with_names(tree):
 
 def save(ckpt_dir: str, step: int, tree, *, extra: Optional[Dict] = None):
     """Atomic checkpoint write (synchronous)."""
+    t_start = time.monotonic()
     names, leaves, _ = _flatten_with_names(tree)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -58,9 +59,13 @@ def save(ckpt_dir: str, step: int, tree, *, extra: Optional[Dict] = None):
         "names": names,
         "shapes": [list(np.shape(x)) for x in leaves],
         "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+        # wall-clock is METADATA ONLY (when was this checkpoint taken);
+        # never use it for interval math — durations below are monotonic
         "time": time.time(),
+        "write_seconds": None,  # filled in below
         "extra": extra or {},
     }
+    manifest["write_seconds"] = time.monotonic() - t_start
     with open(os.path.join(tmp, MANIFEST), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):

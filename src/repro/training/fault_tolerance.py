@@ -34,17 +34,24 @@ class Action(enum.Enum):
 @dataclasses.dataclass
 class HostState:
     host_id: int
-    last_heartbeat: float
+    last_heartbeat: float   # monotonic seconds (never wall-clock)
     step_ewma: float = 0.0
     slow_streak: int = 0
     alive: bool = True
 
 
 class FaultToleranceManager:
+    """All heartbeat interval math runs on ``time.monotonic()``: a wall
+    clock (``time.time``) can jump backward or forward under NTP slew or
+    manual adjustment, and a forward jump larger than ``heartbeat_timeout``
+    fires spurious timeouts on every healthy host at once. Callers passing
+    explicit ``now`` values (tests, simulated drivers) must use one
+    consistent time base across calls — the units are seconds either way."""
+
     def __init__(self, n_hosts: int, *, n_spares: int = 0,
                  heartbeat_timeout: float = 60.0,
                  straggler_factor: float = 1.5, patience: int = 5):
-        now = time.time()
+        now = time.monotonic()
         self.hosts = {i: HostState(i, now) for i in range(n_hosts)}
         self.n_spares = n_spares
         self.timeout = heartbeat_timeout
@@ -55,7 +62,7 @@ class FaultToleranceManager:
     def heartbeat(self, host_id: int, step_duration: Optional[float] = None,
                   now: Optional[float] = None):
         h = self.hosts[host_id]
-        h.last_heartbeat = now if now is not None else time.time()
+        h.last_heartbeat = now if now is not None else time.monotonic()
         if step_duration is not None:
             h.step_ewma = (0.7 * h.step_ewma + 0.3 * step_duration
                            if h.step_ewma else step_duration)
@@ -65,7 +72,7 @@ class FaultToleranceManager:
 
     # -- policy ---------------------------------------------------------------
     def dead_hosts(self, now: Optional[float] = None) -> List[int]:
-        now = now if now is not None else time.time()
+        now = now if now is not None else time.monotonic()
         return [h.host_id for h in self.hosts.values()
                 if not h.alive or now - h.last_heartbeat > self.timeout]
 
